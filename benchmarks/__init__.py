@@ -1,0 +1,1 @@
+"""Benchmark suite: paper figures 2-9, Algorithm-1, kernels, roofline."""

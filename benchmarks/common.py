@@ -1,0 +1,90 @@
+"""Shared world-building for the paper-replication benchmarks.
+
+Scaled-down defaults (CPU container): MNIST-like synthetic data, 10 clients,
+d=5 non-IID, the paper's MLP, SGD lr 0.01, 5 local iterations, batch 10 —
+exactly the paper's FL hyperparameters; rounds and dataset size are reduced
+(documented per figure).  Set REPRO_FULL=1 for paper-scale rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import CellConfig, ProblemSpec
+from repro.core.channel import channel_gains, sample_positions
+from repro.core.selection import (AgeBasedScheme, GreedyScheme, ProposedOnline,
+                                  RandomScheme)
+from repro.data import make_mnist_like, shard_noniid
+from repro.fl import SimConfig, run_simulation
+from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
+
+FULL = os.environ.get("REPRO_FULL", "0") == "1"
+ART = os.environ.get("REPRO_ART", "artifacts/bench")
+
+
+@dataclasses.dataclass
+class World:
+    cell: CellConfig
+    clients: list
+    test_ds: object
+    h: jax.Array          # [K, T]
+    pos: jax.Array
+    params: object
+    rounds: int
+    d: int
+
+
+def build_world(K=10, rounds=None, d=5, seed=0, n_train=None,
+                pos_override=None) -> World:
+    rounds = rounds or (50 if FULL else 16)
+    n_train = n_train or (60_000 if FULL else 5_000)
+    tr, te = make_mnist_like(jax.random.PRNGKey(seed), n_train=n_train,
+                             n_test=1_000)
+    clients = shard_noniid(jax.random.PRNGKey(seed + 1), tr, K, d=d)
+    cell = CellConfig(num_clients=K)
+    if pos_override is None:
+        pos = sample_positions(jax.random.PRNGKey(seed + 2), cell)
+    else:
+        pos = pos_override
+    h = channel_gains(jax.random.PRNGKey(seed + 3), pos, rounds).T
+    params = init_mlp(jax.random.PRNGKey(seed + 4))
+    return World(cell, clients, te, h, pos, params, rounds, d)
+
+
+def run_policy(world: World, policy, seed=0, max_staleness=None,
+               aging=False):
+    cfg = SimConfig(rounds=world.rounds, local_iters=5, batch_size=10,
+                    lr=0.01, eval_every=max(world.rounds // 8, 1), seed=seed,
+                    max_staleness=max_staleness, aging_boost=aging)
+    t0 = time.time()
+    res = run_simulation(world.params, mlp_loss, mlp_accuracy, world.clients,
+                         world.test_ds, policy, world.h, world.cell, cfg)
+    return res, time.time() - t0
+
+
+def schemes_matched(world: World, spec: ProblemSpec):
+    """The paper's four schemes with matched average participation."""
+    from repro.core.selection import average_participants
+    proposed = ProposedOnline(spec)
+    avg = average_participants(proposed, world.h)
+    k = max(1, round(avg))
+    K = world.cell.num_clients
+    return [proposed,
+            RandomScheme(p_bar=min(avg / K, 1.0), num_clients=K),
+            GreedyScheme(k=k, num_clients=K),
+            AgeBasedScheme(k=k, num_clients=K)], avg
+
+
+def save_artifact(name: str, payload: dict):
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,151 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape) from the
+dry-run artifacts, TPU v5e constants.
+
+  compute    = FLOPs_dev / peak_FLOP/s        (197 TF bf16 / chip)
+  memory     = bytes_dev / HBM_bw             (819 GB/s / chip)
+  collective = coll_bytes_dev / link_bw       (~50 GB/s / ICI link)
+
+FLOPs/bytes come from the 1-/2-super-block unrolled *cost probes* (exact —
+XLA counts scan bodies once, see models/costmode.py); collective bytes are
+parsed per-device from post-SPMD HLO.  MODEL_FLOPS = 6·N_active·D (train) or
+2·N_active·D (serve); the ratio MODEL/HLO flags remat/redundancy waste.
+sLSTM keeps a true time recurrence inside the probes, corrected analytically
+below (xlstm only).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs                                    # noqa: E402
+from repro.configs.shapes import SHAPES                      # noqa: E402
+from repro.fl.distributed import param_count                 # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW,               # noqa: E402
+                               PEAK_FLOPS_BF16)
+
+ART = os.environ.get("REPRO_DRYRUN_ART", "artifacts/dryrun")
+
+
+def active_param_count(cfg) -> int:
+    """Params touched per token: MoE counts top_k of num_experts."""
+    import dataclasses
+    if cfg.moe is None:
+        return param_count(cfg)
+    full = param_count(cfg)
+    m = cfg.moe
+    n_moe_layers = sum(1 for i in range(cfg.n_layers)
+                       if cfg.ffn_kind(i) == "moe")
+    per_layer_expert = 3 * cfg.d_model * m.d_ff_expert
+    return int(full - n_moe_layers * (m.num_experts - m.top_k)
+               * per_layer_expert)
+
+
+def model_flops(cfg, shape) -> float:
+    n_act = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * shape.global_batch  # decode: one token per sequence
+
+
+def slstm_correction(cfg, shape, devices: int) -> float:
+    """Per-device flops the probes miss inside the sLSTM time scan."""
+    if "slstm" not in cfg.mixer_pattern or shape.kind == "decode":
+        return 0.0
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    per_token = 10 * d * d + 8 * d * hd
+    n_slstm = sum(1 for i in range(cfg.n_layers)
+                  if cfg.mixer_pattern[i % len(cfg.mixer_pattern)] == "slstm")
+    tokens = shape.global_batch * shape.seq_len
+    factor = 3.0 if shape.kind == "train" else 1.0
+    missed = factor * n_slstm * per_token * tokens * (shape.seq_len - 1) \
+        / shape.seq_len
+    return missed / devices
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok" or "cost_probe" not in rec:
+        return None
+    cfg = configs.get(rec["arch"], SHAPES[rec["shape"]])
+    shape = SHAPES[rec["shape"]]
+    dev = rec["devices"]
+    tot = rec["cost_probe"]["total"]
+    f_dev = tot["flops"] + slstm_correction(cfg, shape, dev)
+    b_dev = tot["bytes"]
+    # differencing can go slightly negative when XLA optimizes the 2-block
+    # probe more aggressively than the 1-block one — clamp to the 1-block
+    # measurement as a floor
+    c_dev = max(tot["collective_bytes"],
+                rec["cost_probe"]["m1"]["collectives"]["total_bytes"])
+    t_compute = f_dev / PEAK_FLOPS_BF16
+    t_memory = b_dev / HBM_BW
+    t_coll = c_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    ratio = mf / max(f_dev * dev, 1.0)
+    suggestion = {
+        "compute": "reduce recompute (remat policy) / use causal-aware "
+                   "kernels to halve masked attention flops",
+        "memory": "larger fused blocks + bf16 intermediates to cut HBM "
+                  "traffic; keep activations model-sharded through the scan",
+        "collective": "reshard to cut the dominant collective (vocab-parallel "
+                      "loss for logits all-reduce; overlap AR with compute)",
+    }[dominant]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "mode": rec.get("mode", "-"),
+        "flops_per_dev": f_dev, "bytes_per_dev": b_dev,
+        "coll_bytes_per_dev": c_dev,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "useful_ratio": ratio,
+        "suggestion": suggestion,
+        "hbm_per_dev_gb": (rec["memory_analysis"]["argument_size_in_bytes"]
+                           + rec["memory_analysis"]["temp_size_in_bytes"])
+        / 1e9,
+    }
+
+
+def main() -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*_16x16.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        r = analyze(rec)
+        if r:
+            rows.append(r)
+            print(f"roofline_{r['arch']}_{r['shape']},0.0,"
+                  f"compute={r['t_compute_s']:.3e}s;"
+                  f"memory={r['t_memory_s']:.3e}s;"
+                  f"collective={r['t_collective_s']:.3e}s;"
+                  f"dominant={r['dominant']};useful={r['useful_ratio']:.2f}")
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+    # markdown table for EXPERIMENTS.md
+    lines = ["| arch | shape | mode | compute s | memory s | collective s |"
+             " dominant | MODEL/HLO | HBM GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['hbm_per_dev_gb']:.1f} |")
+    with open("artifacts/roofline_table.md", "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving example: prefill + greedy decode on a reduced assigned
+architecture — exercises the same serve_step the decode dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch xlstm-125m
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+         "--reduced", "--batch", str(args.batch),
+         "--new-tokens", str(args.new_tokens)]))

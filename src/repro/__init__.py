@@ -1,0 +1,5 @@
+"""repro — production-grade JAX framework reproducing and extending
+"Asynchronous Wireless Federated Learning with Probabilistic Client Selection"
+(Yang, Liu, Chen, Chen, Li; 2023).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""Checkpointing: pytree ←→ .npz + JSON treedef index.
+
+Arrays are flattened with stable keypath names so checkpoints survive module
+refactors that preserve structure; metadata (step, round, energy ledger, rng)
+rides along in the JSON sidecar.
+"""
+from .checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = ["save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,46 @@
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path).replace("/", "_")
+
+
+def save_checkpoint(path: str, tree: Any, metadata: dict | None = None) -> None:
+    """Write ``path``.npz (arrays) and ``path``.json (structure + metadata)."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    keys = []
+    for i, (kp, leaf) in enumerate(leaves_with_paths):
+        name = f"leaf_{i:05d}"
+        arrays[name] = np.asarray(leaf)
+        keys.append(_keystr(kp))
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    np.savez(path + ".npz", **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(path + ".json", "w") as f:
+        json.dump({"keys": keys, "treedef": str(treedef),
+                   "metadata": metadata or {}}, f)
+
+
+def load_checkpoint(path: str, like: Any) -> tuple[Any, dict]:
+    """Restore into the structure of ``like`` (same treedef as when saved)."""
+    data = np.load(path + ".npz")
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    leaves = [data[f"leaf_{i:05d}"] for i in range(len(meta["keys"]))]
+    treedef = jax.tree_util.tree_structure(like)
+    if treedef.num_leaves != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves; target structure expects "
+            f"{treedef.num_leaves}")
+    like_leaves = jax.tree_util.tree_leaves(like)
+    restored = [np.asarray(l).astype(ll.dtype) if hasattr(ll, "dtype") else l
+                for l, ll in zip(leaves, like_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, restored), meta["metadata"]

@@ -1,0 +1,12 @@
+"""InternLM2-1.8B [arXiv:2403.17297]: GQA kv=8, SwiGLU."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internlm2-1.8b",
+    family="dense",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8,
+    d_ff=8192, vocab=92544,
+    rope_theta=1_000_000.0,
+    citation="arXiv:2403.17297",
+    notes="long_500k runs with sliding_window=8192 (sub-quadratic carve-out).",
+)

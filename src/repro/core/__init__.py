@@ -1,0 +1,22 @@
+"""Core contribution of the paper: wireless async-FL scheduling.
+
+Public API:
+  channel       — cell/channel model, rates, energies (eqs. 4-5)
+  lambertw      — principal-branch Lambert W (pure JAX)
+  fractional    — sum-of-ratios transform (Theorem 2 residual system)
+  algorithm1    — offline globally-optimal solver (Algorithm 1)
+  online        — online variant (P1'), closed form (46)
+  selection     — proposed / random / greedy / age-based policies
+  convergence   — Lemma 1 / Theorem 1 bounds and metric (10)
+"""
+from . import algorithm1, channel, convergence, fractional, online, selection
+from .algorithm1 import Algorithm1Result, ProblemSpec, objective_p1
+from .channel import CellConfig
+from .lambertw import lambertw
+from .online import OnlineResult, solve_online
+
+__all__ = [
+    "algorithm1", "channel", "convergence", "fractional", "online",
+    "selection", "Algorithm1Result", "ProblemSpec", "objective_p1",
+    "CellConfig", "lambertw", "OnlineResult", "solve_online",
+]

@@ -1,0 +1,103 @@
+"""Wireless channel model for the FL cell network (paper §II-B, Table II).
+
+All of the paper's closed forms (eqs. 26, 31, 46) are derived with a natural-log
+Shannon rate.  We therefore keep *nats* internally: ``rate_nats = w·W·ln(1+SNR)``
+and convert the model size ``S`` from bits to nats (``S_nats = S_bits·ln2``) so
+that every energy expression ``p·P·S/R`` is numerically identical to the
+bits/log2 convention while the paper's formulas hold verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+LN2 = 0.6931471805599453
+
+
+@dataclasses.dataclass(frozen=True)
+class CellConfig:
+    """Wireless network parameters (paper Table II)."""
+
+    num_clients: int = 10
+    cell_radius_m: float = 1000.0
+    bandwidth_hz: float = 5e6                  # W
+    tx_power_w: float = 0.2                    # P_k (uniform in the paper)
+    noise_dbm_per_hz: float = -174.0           # N_0
+    model_size_bits: float = 6.37e6            # S (MNIST MLP in the paper)
+    min_radius_m: float = 1.0                  # avoid log10(0) at the server
+
+    @property
+    def noise_w_per_hz(self) -> float:
+        return 10.0 ** (self.noise_dbm_per_hz / 10.0) * 1e-3
+
+    @property
+    def model_size_nats(self) -> float:
+        return self.model_size_bits * LN2
+
+
+def path_loss_db(dist_m: jax.Array) -> jax.Array:
+    """``128.1 + 37.6 log10(r_km)`` dB (3GPP TR 36.814, paper Table II)."""
+    r_km = jnp.maximum(dist_m, 1.0) / 1000.0
+    return 128.1 + 37.6 * jnp.log10(r_km)
+
+
+def path_gain(dist_m: jax.Array) -> jax.Array:
+    """Linear channel power gain from the 3GPP path loss."""
+    return 10.0 ** (-path_loss_db(dist_m) / 10.0)
+
+
+def sample_positions(key: jax.Array, cfg: CellConfig,
+                     r_min: float | None = None,
+                     r_max: float | None = None) -> jax.Array:
+    """Uniform positions in an annulus [r_min, r_max] of the cell (meters).
+
+    Uniform *in area*: r = sqrt(u·(r_max²−r_min²)+r_min²).
+    """
+    r_min = cfg.min_radius_m if r_min is None else r_min
+    r_max = cfg.cell_radius_m if r_max is None else r_max
+    u = jax.random.uniform(key, (cfg.num_clients,))
+    return jnp.sqrt(u * (r_max**2 - r_min**2) + r_min**2)
+
+
+def sample_fading(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """Rayleigh block fading: exponential(1) power gain."""
+    return jax.random.exponential(key, shape)
+
+
+def channel_gains(key: jax.Array, dist_m: jax.Array, num_rounds: int) -> jax.Array:
+    """``h_{k,t}`` (num_rounds, K): path gain × i.i.d. Rayleigh fading per round."""
+    fading = sample_fading(key, (num_rounds, dist_m.shape[0]))
+    return fading * path_gain(dist_m)[None, :]
+
+
+@partial(jax.jit, static_argnames=())
+def rate_nats(w: jax.Array, h: jax.Array, P: jax.Array,
+              W: float, N0: float) -> jax.Array:
+    """Achievable rate (eq. 4) in nats/s: ``w·W·ln(1 + P·h / (w·W·N0))``.
+
+    Safe at w→0 (rate → 0; the limit of w·ln(1+c/w) is 0⁺).
+    """
+    w_safe = jnp.maximum(w, 1e-12)
+    snr = P * h / (w_safe * W * N0)
+    return w_safe * W * jnp.log1p(snr)
+
+
+def rate_bits(w, h, P, W, N0):
+    """Achievable rate in bits/s (Shannon log2)."""
+    return rate_nats(w, h, P, W, N0) / LN2
+
+
+@jax.jit
+def tx_energy_j(p: jax.Array, w: jax.Array, h: jax.Array, P: jax.Array,
+                W: float, N0: float, S_nats: float) -> jax.Array:
+    """Expected per-client transmit energy (eq. 5 summand): ``p·P·S / R``.
+
+    Returns per-client energies; sum for E_t.  Where w==0 the client cannot
+    transmit; energy is +inf if p>0 else 0.
+    """
+    R = rate_nats(w, h, P, W, N0)
+    e = p * P * S_nats / jnp.maximum(R, 1e-30)
+    return jnp.where(p <= 0.0, 0.0, e)

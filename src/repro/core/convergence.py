@@ -1,0 +1,46 @@
+"""Convergence-rate expressions (paper §III): Lemma 1, eq. (7)/(8), Theorem 1,
+and the O(·) metric (10) that Algorithm 1 optimizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lemma1_bound(eta: float, L: float, g_max: float, sigma: float,
+                 f_max: float, T: int, delta: jax.Array) -> jax.Array:
+    """Eq. (6): bound on (1/T)Σ E‖∇f(x_t)‖² given max intervals Δ_k."""
+    K = delta.shape[0]
+    return (8.0 * f_max / (eta * T)
+            + 92.0 * eta**2 * L**2 * g_max**2 * jnp.sum(delta**2) / K
+            + 9.0 * sigma**2)
+
+
+def expected_delta(p: jax.Array) -> jax.Array:
+    """Eq. (7): E[Δ_k] = Σ_t p_{k,t} Π_{τ<t}(1−p_{k,τ}) · t  for p: [K, T].
+
+    (The exact first-communication-time expectation the paper approximates.)
+    """
+    one_minus = jnp.concatenate(
+        [jnp.ones_like(p[:, :1]), jnp.cumprod(1.0 - p[:, :-1], axis=1)], axis=1)
+    t = jnp.arange(p.shape[1], dtype=p.dtype)
+    return jnp.sum(p * one_minus * t[None, :], axis=1)
+
+
+def delta_prime(p: jax.Array) -> jax.Array:
+    """Eq. (8): periodic approximation Δ'_k = T / Σ_t p_{k,t}."""
+    T = p.shape[1]
+    return T / jnp.maximum(jnp.sum(p, axis=1), 1e-12)
+
+
+def theorem1_bound(eta: float, L: float, g_max: float, sigma: float,
+                   f_max: float, p: jax.Array) -> jax.Array:
+    """Eq. (9): Lemma 1 with Δ_k ← Δ'_k(p)."""
+    T = p.shape[1]
+    return lemma1_bound(eta, L, g_max, sigma, f_max, T, delta_prime(p))
+
+
+def convergence_metric(p: jax.Array) -> jax.Array:
+    """Eq. (10): (T²/K) Σ_k (Σ_t p_{k,t})^{-2} — the solver's convergence term."""
+    K, T = p.shape
+    return T**2 / K * jnp.sum(jnp.sum(p, axis=1) ** -2)

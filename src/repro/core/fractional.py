@@ -1,0 +1,101 @@
+"""Sum-of-ratios fractional-programming machinery (paper Theorem 2, eqs. 19/34-40).
+
+Jong's transform turns (P1) into the parameterized subtractive problem (P2) with
+auxiliary variables (α, β, γ).  The optimum of (P1) is the joint point where the
+inner problem (P2) is solved *and* the residual system (19) vanishes:
+
+    ψ_{k,t} = α_{k,t}·R*_{k,t} − 1
+    κ_{k,t} = β_{k,t}·R*_{k,t} − p*_{k,t}·P_k·S·(1−ρ)
+    χ_k     = γ_k − ρT²/(K·(Σ_t p*_{k,t})²)
+
+The outer update is the damped (modified-Newton) step (37)-(39) with the Armijo
+condition (40).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AuxVars(NamedTuple):
+    alpha: jax.Array  # [K, T]
+    beta: jax.Array   # [K, T]
+    gamma: jax.Array  # [K]
+
+
+class Residuals(NamedTuple):
+    psi: jax.Array    # [K, T]
+    kappa: jax.Array  # [K, T]
+    chi: jax.Array    # [K]
+
+    @property
+    def sq_norm(self) -> jax.Array:
+        return (jnp.sum(self.psi**2) + jnp.sum(self.kappa**2)
+                + jnp.sum(self.chi**2))
+
+
+def residuals(aux: AuxVars, p: jax.Array, R: jax.Array, PkS1r: jax.Array,
+              rho: float, T: int, K: int) -> Residuals:
+    """Evaluate (34)-(36) at the inner solution (p, R) for given aux vars.
+
+    PkS1r: per-client constant ``P_k · S · (1−ρ)`` broadcastable to [K, T].
+
+    We use *relative* residuals (each equation divided by its natural scale) so
+    that a single tolerance is meaningful across the wildly different magnitudes
+    of α (~1/R), β (~p·P·S/R) and γ (~ρT²/K): the zero set is identical to the
+    paper's (19) and the Newton targets are unchanged.
+    """
+    psi = aux.alpha * R - 1.0
+    kappa = aux.beta * R / (p * PkS1r) - 1.0
+    sum_p = jnp.sum(p, axis=1)
+    chi = aux.gamma * (K * sum_p**2) / (rho * T**2) - 1.0
+    return Residuals(psi, kappa, chi)
+
+
+def newton_targets(p: jax.Array, R: jax.Array, PkS1r: jax.Array,
+                   rho: float, T: int, K: int) -> AuxVars:
+    """The values that zero each residual exactly (RHS of eqs. 37-39)."""
+    alpha_t = 1.0 / R
+    beta_t = p * PkS1r / R
+    gamma_t = rho * T**2 / (K * jnp.sum(p, axis=1) ** 2)
+    return AuxVars(alpha_t, beta_t, gamma_t)
+
+
+def newton_update(aux: AuxVars, target: AuxVars, p, R, PkS1r, rho, T, K,
+                  zeta: float = 0.5, eps: float = 0.01,
+                  max_l: int = 30) -> tuple[AuxVars, jax.Array]:
+    """Damped Newton step (37)-(39) with step-size rule (40).
+
+    Picks the smallest l ≥ 1 with ζ^l satisfying the Armijo-type decrease; since
+    the residuals are affine in (α, β, γ) at fixed (p*, R*), l=1 generally
+    accepts, but we implement the search faithfully.
+    """
+    base = residuals(aux, p, R, PkS1r, rho, T, K).sq_norm
+
+    def cand(step):
+        return AuxVars(
+            alpha=(1 - step) * aux.alpha + step * target.alpha,
+            beta=(1 - step) * aux.beta + step * target.beta,
+            gamma=(1 - step) * aux.gamma + step * target.gamma,
+        )
+
+    def cond(carry):
+        l, accepted = carry[0], carry[1]
+        return jnp.logical_and(~accepted, l <= max_l)
+
+    dt = jnp.result_type(p, R)
+
+    def body(carry):
+        l, _, _ = carry
+        step = jnp.asarray(zeta, dt) ** l
+        c = cand(step)
+        val = residuals(c, p, R, PkS1r, rho, T, K).sq_norm
+        ok = val <= (1.0 - eps * step) * base
+        return (l + 1, ok, step)
+
+    l, ok, step = jax.lax.while_loop(cond, body, (jnp.int32(1), jnp.bool_(False),
+                                                  jnp.asarray(zeta, dt)))
+    step = jnp.where(ok, step, zeta)  # fall back to ζ¹ if search exhausts
+    return cand(step), step

@@ -1,0 +1,51 @@
+"""Principal branch of the Lambert W function, pure JAX.
+
+The paper's bandwidth closed form (eq. 31) evaluates ``W0(-exp(-A))`` with
+``A = 1 + v/(αβW) ≥ 1``, i.e. arguments in ``[-1/e, 0)``.  We implement W0 on
+its full domain ``[-1/e, ∞)`` with a branch-aware initial guess followed by
+Halley iterations (cubic convergence; 12 iterations reach fp64 round-off).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INV_E = 0.36787944117144233  # 1/e
+
+
+def _initial_guess(x: jax.Array) -> jax.Array:
+    # Series about the branch point x = -1/e:  W = -1 + p - p²/3 + 11p³/72, p=sqrt(2(ex+1))
+    p = jnp.sqrt(jnp.maximum(2.0 * (jnp.e * x + 1.0), 0.0))
+    near_branch = -1.0 + p - p * p / 3.0 + 11.0 * p**3 / 72.0
+    # Asymptotic for large x: L1 - L2 + L2/L1
+    xl = jnp.maximum(x, 2.0)
+    l1 = jnp.log(xl)
+    l2 = jnp.log(l1)
+    asym = l1 - l2 + l2 / l1
+    # Padé-ish mid-range guess
+    mid = x * (1.0 + 1.4586887 * x) / (1.0 + x * (2.4586887 + 0.43478693 * x))
+    guess = jnp.where(x < -0.2, near_branch, jnp.where(x > 2.0, asym, mid))
+    return guess
+
+
+@jax.jit
+def lambertw(x: jax.Array) -> jax.Array:
+    """W0(x) for x ≥ -1/e (element-wise).  NaN outside the domain."""
+    x = jnp.asarray(x, dtype=jnp.result_type(x, jnp.float32))
+    w = _initial_guess(x)
+
+    def halley(w, _):
+        ew = jnp.exp(w)
+        f = w * ew - x
+        wp1 = w + 1.0
+        denom = ew * wp1 - (w + 2.0) * f / (2.0 * wp1)
+        step = f / jnp.where(jnp.abs(denom) < 1e-300, 1e-300, denom)
+        # guard the branch point where wp1 -> 0
+        step = jnp.where(jnp.abs(wp1) < 1e-12, 0.0, step)
+        return w - step, None
+
+    w, _ = jax.lax.scan(halley, w, None, length=12)
+    w = jnp.where(x < -INV_E - 1e-9, jnp.nan, w)
+    # exact at the branch point
+    w = jnp.where(jnp.abs(x + INV_E) <= 1e-12, -1.0, w)
+    return w

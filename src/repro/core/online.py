@@ -1,0 +1,98 @@
+"""Online variant of Algorithm 1 (paper §IV-D, problem (P1')).
+
+With round-invariant probabilities ``p_{k,t} = p_k`` the solver only needs the
+*current* round's channel state: alternate the Lambert-W bandwidth step (31)
+with the closed-form probability (46)
+
+    p_k* = clip( (2ρ / (K α_k P_k S T (1−ρ)))^{1/3}, λ, 1 ),
+
+updating (α, β) by the same damped-Newton rule until the residuals vanish.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .algorithm1 import ProblemSpec, solve_p4
+from .channel import rate_nats
+
+
+class OnlineResult(NamedTuple):
+    p: jax.Array          # [K]
+    w: jax.Array          # [K]
+    objective: jax.Array
+    residual: jax.Array
+    iters: jax.Array
+
+
+def objective_p1_prime(p, w, h, spec: ProblemSpec):
+    """Eq. (41)."""
+    c = spec.cell
+    R = rate_nats(w, h, c.tx_power_w, c.bandwidth_hz, c.noise_w_per_hz)
+    conv = spec.rho / spec.K * jnp.sum(p**-2)
+    energy = (1 - spec.rho) * spec.T * jnp.sum(
+        p * c.tx_power_w * c.model_size_nats / jnp.maximum(R, 1e-30))
+    return conv + energy
+
+
+@partial(jax.jit, static_argnames=("spec", "max_outer", "tol"))
+def solve_online(h: jax.Array, spec: ProblemSpec, max_outer: int = 200,
+                 tol: float = 1e-10) -> OnlineResult:
+    """Solve (P1') for a single round's channel gains h: [K]."""
+    c = spec.cell
+    K, T = spec.K, spec.T
+    PkST1r = c.tx_power_w * c.model_size_nats * T * (1.0 - spec.rho)
+    zeta, eps = 0.1, 0.01  # damping: see algorithm1.solve
+
+    w = jnp.full((K,), 1.0 / K, dtype=h.dtype)
+    R = rate_nats(w, h, c.tx_power_w, c.bandwidth_hz, c.noise_w_per_hz)
+    p = jnp.clip((2 * spec.rho / (K * (1.0 / R) * PkST1r)) ** (1 / 3),
+                 spec.lam, 1.0)
+    alpha, beta = 1.0 / R, p * PkST1r / R
+
+    def res_sq(alpha, beta, p, R):
+        psi = alpha * R - 1.0
+        kappa = beta * R / (p * PkST1r) - 1.0
+        return jnp.sum(psi**2) + jnp.sum(kappa**2)
+
+    def outer(carry):
+        alpha, beta, p, w, it, _ = carry
+        # (46): closed-form probability given α
+        p = jnp.clip((2 * spec.rho / (K * alpha * PkST1r)) ** (1 / 3),
+                     spec.lam, 1.0)
+        # (31)/(33): bandwidth given α·β
+        w = solve_p4(alpha * beta, h, c)
+        R = rate_nats(w, h, c.tx_power_w, c.bandwidth_hz, c.noise_w_per_hz)
+        # damped Newton on (α, β) with the (40)-style step rule
+        base = res_sq(alpha, beta, p, R)
+        ta, tb = 1.0 / R, p * PkST1r / R
+
+        def cand(step):
+            return (1 - step) * alpha + step * ta, (1 - step) * beta + step * tb
+
+        def search(carry):
+            l, ok, _ = carry
+            step = zeta ** l
+            a2, b2 = cand(step)
+            ok = res_sq(a2, b2, p, R) <= (1 - eps * step) * base
+            return l + 1, ok, step
+
+        l, ok, step = jax.lax.while_loop(
+            lambda cr: jnp.logical_and(~cr[1], cr[0] <= 30), search,
+            (jnp.int32(1), jnp.bool_(False), jnp.asarray(zeta, h.dtype)))
+        step = jnp.where(ok, step, zeta)
+        alpha, beta = cand(step)
+        res = res_sq(alpha, beta, p, R)
+        return alpha, beta, p, w, it + 1, res
+
+    def cond(carry):
+        *_, it, res = carry
+        return jnp.logical_and(it < max_outer, res > tol)
+
+    init = (alpha, beta, p, w, jnp.int32(0), jnp.asarray(jnp.inf, h.dtype))
+    alpha, beta, p, w, it, res = jax.lax.while_loop(cond, outer, init)
+    return OnlineResult(p=p, w=w, objective=objective_p1_prime(p, w, h, spec),
+                        residual=res, iters=it)

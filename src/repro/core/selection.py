@@ -1,0 +1,134 @@
+"""Client-selection policies: the paper's proposed scheme and its three
+benchmarks (§V-A): Random, Greedy (top-k channel gain), Age-based (round-robin).
+
+A policy maps the current round's channel state to (participation, bandwidth):
+
+  * probabilistic policies return per-client transmit probabilities ``p`` and
+    an allocation ``w`` computed *before* the clients' autonomous decisions
+    (paper protocol Steps 2-4);
+  * deterministic benchmarks return a one-hot mask as the probability vector.
+
+``realize`` draws the Bernoulli participation for any policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+from .algorithm1 import ProblemSpec, solve as solve_offline
+from .online import solve_online
+
+
+@dataclasses.dataclass
+class RoundDecision:
+    probs: jax.Array   # [K] transmit probabilities (deterministic ⇒ 0/1)
+    w: jax.Array       # [K] bandwidth ratios allocated by the server
+
+
+class Policy(Protocol):
+    name: str
+
+    def decide(self, t: int, h_t: jax.Array) -> RoundDecision: ...
+
+
+def realize(key: jax.Array, decision: RoundDecision) -> jax.Array:
+    """Bernoulli draw of the participation mask C_t (paper protocol Step 3)."""
+    u = jax.random.uniform(key, decision.probs.shape)
+    return (u < decision.probs).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ProposedOnline:
+    """Paper's scheme, online variant (§IV-D): solve (P1') each round."""
+
+    spec: ProblemSpec
+    name: str = "proposed"
+
+    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
+        res = solve_online(h_t, self.spec)
+        return RoundDecision(probs=res.p, w=res.w)
+
+
+@dataclasses.dataclass
+class ProposedOffline:
+    """Paper's scheme, offline Algorithm 1 on the full horizon of gains."""
+
+    spec: ProblemSpec
+    h_all: jax.Array  # [K, T]
+    name: str = "proposed-offline"
+
+    def __post_init__(self):
+        res = solve_offline(self.h_all, self.spec)
+        self._p, self._w = res.p, res.w
+
+    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
+        return RoundDecision(probs=self._p[:, t], w=self._w[:, t])
+
+
+@dataclasses.dataclass
+class RandomScheme:
+    """All clients transmit with the same probability p̄ (paper benchmark 1).
+
+    Because participation is autonomous, the server must reserve a feasible
+    orthogonal allocation up-front: w = 1/K each (Σw = 1 for any realization).
+    """
+
+    p_bar: float
+    num_clients: int
+    name: str = "random"
+
+    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
+        K = self.num_clients
+        probs = jnp.full((K,), self.p_bar)
+        w = jnp.full((K,), 1.0 / K)
+        return RoundDecision(probs=probs, w=w)
+
+
+@dataclasses.dataclass
+class GreedyScheme:
+    """Top-k clients by instantaneous channel gain [36], [38]; equal split."""
+
+    k: int
+    num_clients: int
+    name: str = "greedy"
+
+    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
+        K = self.num_clients
+        idx = jnp.argsort(-h_t)[: self.k]
+        probs = jnp.zeros((K,)).at[idx].set(1.0)
+        w = jnp.zeros((K,)).at[idx].set(1.0 / self.k)
+        return RoundDecision(probs=probs, w=w)
+
+
+@dataclasses.dataclass
+class AgeBasedScheme:
+    """Round-robin k clients per round [33] — the optimum of Lemma 3's
+    equal-Δ′ fairness argument."""
+
+    k: int
+    num_clients: int
+    name: str = "age"
+
+    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
+        K = self.num_clients
+        start = (t * self.k) % K
+        idx = (start + jnp.arange(self.k)) % K
+        probs = jnp.zeros((K,)).at[idx].set(1.0)
+        w = jnp.zeros((K,)).at[idx].set(1.0 / self.k)
+        return RoundDecision(probs=probs, w=w)
+
+
+def average_participants(policy: Policy, h_all: jax.Array) -> float:
+    """Expected number of transmitting clients per round under a policy —
+    used to match k across schemes for fair comparison (paper §V-A)."""
+    T = h_all.shape[1]
+    tot = 0.0
+    for t in range(T):
+        tot += float(jnp.sum(policy.decide(t, h_all[:, t]).probs))
+    return tot / T

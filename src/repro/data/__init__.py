@@ -1,0 +1,8 @@
+"""Data substrate: synthetic datasets, the paper's non-IID partitioner,
+batching pipeline."""
+from .noniid import heterogeneity, shard_noniid
+from .pipeline import BatchIterator, client_batches
+from .synthetic import Dataset, make_cifar_like, make_mnist_like, make_token_stream
+
+__all__ = ["Dataset", "make_mnist_like", "make_cifar_like", "make_token_stream",
+           "shard_noniid", "heterogeneity", "BatchIterator", "client_batches"]

@@ -1,0 +1,51 @@
+"""Minimal deterministic batching pipeline (device-agnostic, keyed shuffling).
+
+Each client in the FL simulator owns one ``BatchIterator`` over its local
+shard; the distributed trainer uses ``client_batches`` to build the stacked
+[K, per_client_batch, ...] arrays the vmap-over-clients step consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .synthetic import Dataset
+
+
+@dataclasses.dataclass
+class BatchIterator:
+    """Infinite shuffled batches over a dataset (numpy-side, cheap)."""
+
+    ds: Dataset
+    batch_size: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._x = np.asarray(self.ds.x)
+        self._y = np.asarray(self.ds.y)
+        self._order = self._rng.permutation(len(self._y))
+        self._pos = 0
+
+    def __next__(self):
+        n = len(self._y)
+        if self.batch_size >= n:
+            return jnp.asarray(self._x), jnp.asarray(self._y)
+        if self._pos + self.batch_size > n:
+            self._order = self._rng.permutation(n)
+            self._pos = 0
+        sel = self._order[self._pos: self._pos + self.batch_size]
+        self._pos += self.batch_size
+        return jnp.asarray(self._x[sel]), jnp.asarray(self._y[sel])
+
+    def __iter__(self):
+        return self
+
+
+def client_batches(iters: list[BatchIterator]) -> tuple[jax.Array, jax.Array]:
+    """Stack one batch per client: ([K, B, ...], [K, B])."""
+    xs, ys = zip(*(next(it) for it in iters))
+    return jnp.stack(xs), jnp.stack(ys)

@@ -1,0 +1,8 @@
+"""FL runtime: paper-faithful async simulator + mega-scale distributed step."""
+from .simulator import SimConfig, SimResult, run_simulation
+from .state import (FLState, init_fl_state, masked_aggregate,
+                    pseudo_gradients, broadcast_to_participants)
+
+__all__ = ["SimConfig", "SimResult", "run_simulation", "FLState",
+           "init_fl_state", "masked_aggregate", "pseudo_gradients",
+           "broadcast_to_participants"]

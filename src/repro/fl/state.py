@@ -1,0 +1,85 @@
+"""FL state containers.
+
+``FLState`` holds the server's global model plus the *stacked* per-client
+states (leading axis K): each client's divergent local model ``x_k`` and its
+anchor ``y_k`` — the last global model it received (paper eq. 2).  Stacking
+makes the whole protocol a handful of vmapped/einsummed pytree ops, and at
+mega-scale the same leading axis becomes the data-parallel mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FLState(NamedTuple):
+    global_params: Any   # pytree, the server's x_t
+    client_params: Any   # pytree with leading K axis, x_{k,t}
+    anchor_params: Any   # pytree with leading K axis, y_{k,t}
+    round: jax.Array     # int32 scalar
+    last_tx: jax.Array   # [K] int32, round of last transmission (staleness)
+
+
+def replicate(params: Any, k: int) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (k,) + p.shape), params)
+
+
+def init_fl_state(params: Any, num_clients: int) -> FLState:
+    stacked = replicate(params, num_clients)
+    return FLState(
+        global_params=params,
+        client_params=stacked,
+        anchor_params=stacked,
+        round=jnp.zeros((), jnp.int32),
+        last_tx=jnp.zeros((num_clients,), jnp.int32),
+    )
+
+
+def pseudo_gradients(state: FLState) -> Any:
+    """Eq. (2): δ_k = x_k − y_k (stacked over clients)."""
+    return jax.tree_util.tree_map(lambda c, a: c - a,
+                                  state.client_params, state.anchor_params)
+
+
+def masked_aggregate(global_params: Any, deltas: Any, mask: jax.Array,
+                     num_clients: int, use_pallas: bool = False) -> Any:
+    """Eq. (3): x ← x + (1/K) Σ_{k∈C_t} δ_k.
+
+    ``use_pallas=True`` routes every leaf through the fused
+    ``kernels.fl_aggregate`` TPU kernel (one HBM pass per tile; interpret
+    mode on CPU); default is the jnp oracle path.
+    """
+    if use_pallas:
+        from ..kernels import ops
+
+        def agg_k(g, d):
+            out = ops.fl_aggregate(g.reshape(-1),
+                                   d.reshape(d.shape[0], -1),
+                                   mask.astype(jnp.float32), use_pallas=True)
+            return out.reshape(g.shape).astype(g.dtype)
+
+        return jax.tree_util.tree_map(agg_k, global_params, deltas)
+
+    def agg(g, d):
+        m = mask.astype(d.dtype).reshape((-1,) + (1,) * (d.ndim - 1))
+        return g + jnp.sum(d * m, axis=0) / num_clients
+
+    return jax.tree_util.tree_map(agg, global_params, deltas)
+
+
+def broadcast_to_participants(state: FLState, new_global: Any,
+                              mask: jax.Array) -> FLState:
+    """Protocol Step 5: participants receive x_t (both x_k and y_k reset)."""
+    def sel(stacked, g):
+        m = mask.reshape((-1,) + (1,) * (g.ndim)).astype(bool)
+        return jnp.where(m, g[None], stacked)
+
+    client = jax.tree_util.tree_map(sel, state.client_params, new_global)
+    anchor = jax.tree_util.tree_map(sel, state.anchor_params, new_global)
+    last_tx = jnp.where(mask.astype(bool), state.round, state.last_tx)
+    return state._replace(global_params=new_global, client_params=client,
+                          anchor_params=anchor, round=state.round + 1,
+                          last_tx=last_tx)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical hot-spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling) with its jnp oracle in ref.py and the jit'd dispatch wrapper in
+ops.py.  Validated in interpret mode on CPU; TPU is the target.
+"""
+from . import ops, ref
+from .fl_aggregate import fl_aggregate
+from .flash_attention import flash_attention
+from .selective_scan import selective_scan
+
+__all__ = ["ops", "ref", "fl_aggregate", "flash_attention", "selective_scan"]

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: masked pseudo-gradient aggregation (paper eq. 3).
+
+The server update ``x ← x + (1/K) Σ_{k∈C_t} δ_k`` is a pure HBM-bandwidth
+op over K × P bytes every round.  Fusing mask·scale·reduce·add into one pass
+reads each δ tile once and writes the updated global tile once — ~2× less
+HBM traffic than the unfused jnp chain (mask-mul materializes a K×P temp).
+
+Grid: one step per (rows/BLOCK_R) tile.  Block shapes:
+  deltas  (K, BLOCK_R, 128)  — client axis reduced in VMEM
+  global  (BLOCK_R, 128)
+  mask    (K, 1)             — broadcast to every grid step
+VMEM per step (K=16, BLOCK_R=64, fp32): 16·64·128·4 ≈ 512 KB. MXU-free
+(VPU reduction), 128-lane aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 64
+LANE = 128
+
+
+def _kernel(mask_ref, global_ref, deltas_ref, out_ref, *, inv_k: float):
+    d = deltas_ref[...].astype(jnp.float32)          # [K, BR, 128]
+    m = mask_ref[...].astype(jnp.float32)            # [K, 1]
+    agg = jnp.sum(d * m[:, :, None], axis=0) * inv_k  # [BR, 128]
+    out_ref[...] = (global_ref[...].astype(jnp.float32)
+                    + agg).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fl_aggregate(global_p: jax.Array, deltas: jax.Array, mask: jax.Array,
+                 interpret: bool = True) -> jax.Array:
+    """global_p: [M]; deltas: [K, M]; mask: [K] → updated global [M].
+
+    M is padded to a (BLOCK_R·128) multiple internally.
+    """
+    K, M = deltas.shape
+    tile = BLOCK_R * LANE
+    Mp = (M + tile - 1) // tile * tile
+    gp = jnp.pad(global_p, (0, Mp - M)).reshape(Mp // LANE, LANE)
+    dp = jnp.pad(deltas, ((0, 0), (0, Mp - M))).reshape(K, Mp // LANE, LANE)
+    grid = (Mp // tile,)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, inv_k=1.0 / K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_R, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((K, BLOCK_R, LANE), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp // LANE, LANE), global_p.dtype),
+        interpret=interpret,
+    )(mask.reshape(K, 1), gp, dp)
+    return out.reshape(Mp)[:M]

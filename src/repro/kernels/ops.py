@@ -1,0 +1,44 @@
+"""jit'd dispatch wrappers: Pallas kernel on TPU, jnp oracle elsewhere.
+
+``use_pallas=None`` auto-selects: the kernels are TPU-targeted
+(pl.pallas_call + BlockSpec VMEM tiling); on this CPU container they execute
+in interpret mode (Python evaluation of the kernel body) — correct but slow,
+so the model code defaults to the jnp path and the kernels are exercised by
+the test sweeps + benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .fl_aggregate import fl_aggregate as _fl_aggregate_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .selective_scan import selective_scan as _scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fl_aggregate(global_p, deltas, mask, use_pallas: bool | None = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _fl_aggregate_pallas(global_p, deltas, mask,
+                                    interpret=not _on_tpu())
+    return ref.fl_aggregate_ref(global_p, deltas, mask)
+
+
+def flash_attention(q, k, v, causal=True, window=None,
+                    use_pallas: bool | None = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def selective_scan(xc, dt, Bm, Cm, A, D, use_pallas: bool | None = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _scan_pallas(xc, dt, Bm, Cm, A, D, interpret=not _on_tpu())
+    return ref.selective_scan_ref(xc, dt, Bm, Cm, A, D)

@@ -1,0 +1,1 @@
+"""Launcher: production mesh, sharding policy, dry-run, train/serve CLIs."""

@@ -1,0 +1,34 @@
+"""Production mesh definitions (TPU v5e target).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; ``dryrun.py`` sets XLA_FLAGS before any jax import to fabricate the
+512 host devices the multi-pod mesh needs.
+"""
+from __future__ import annotations
+
+import jax
+
+# --- hardware constants (TPU v5e) -------------------------------------------
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+CHIPS_PER_POD = 256
+HBM_PER_CHIP = 16e9             # bytes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel (client) axes of a mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def num_clients(mesh) -> int:
+    """Virtual FL clients = product of data-parallel axis sizes."""
+    import numpy as np
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in dp_axes(mesh)]))

@@ -1,0 +1,251 @@
+"""Sharding policy: pytree leaf → PartitionSpec.
+
+Baseline (paper-faithful) layout:
+  * virtual-client axis (leading K on replica-mode FL state, batch, masks)
+    → data-parallel mesh axes ("pod","data")
+  * parameters → Megatron-style 1-D tensor parallelism over "model":
+    input-side projections shard the output feature dim, output-side
+    projections shard the input feature dim (one all-reduce per block);
+    experts shard over "model" (expert parallelism); vocab shards embed /
+    unembed.
+  * masked-DP mode (jamba-398B / llama4-400B) additionally shards every
+    parameter's largest remaining dim over "data" (FSDP) so one copy fits.
+
+Every rule is divisibility-guarded; anything unmatched replicates.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+
+def _axis_size(mesh, name) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+# (regex on keypath, index of dim to shard over "model"); negative = from end
+_MODEL_DIM_RULES: list[tuple[str, int]] = [
+    (r"\['embed'\]$", 0),                 # [V, d] vocab-sharded
+    (r"\['unembed'\]$", -1),              # [d, V]
+    (r"\['wq'\]$", -1), (r"\['wk'\]$", -1), (r"\['wv'\]$", -1),
+    (r"\['wo'\]$", -2),
+    (r"\['ffn'\]\['w1'\]$", -1), (r"\['ffn'\]\['w3'\]$", -1),
+    (r"\['ffn'\]\['w2'\]$", -2),
+    (r"\['router'\]$", None),             # replicated
+    (r"\['in_proj'\]$", -1),
+    (r"\['out_proj'\]$", -2),
+    (r"\['x_proj'\]$", -2),
+    (r"\['dt_proj'\]$", -1),
+    (r"\['A_log'\]$", -2), (r"\['dt_bias'\]$", -1), (r"\['D'\]$", -1),
+    (r"\['conv_w'\]$", -1), (r"\['conv_b'\]$", -1),
+    (r"\['wog'\]$", -1), (r"\['out'\]$", -2),
+    (r"\['wi'\]$", None), (r"\['wf'\]$", None),
+    (r"\['wz'\]$", -1), (r"\['ri'\]$", None), (r"\['rf'\]$", None),
+    (r"\['rz'\]$", None), (r"\['ro'\]$", None),
+    (r"norm", None), (r"\['ln1'\]$", None), (r"\['ln2'\]$", None),
+]
+
+# MoE expert stacks: [R, E, ., .] — expert-parallel over "model"
+_EXPERT_RULE = re.compile(r"\['ffn'\]\['w[123]'\]$")
+
+
+def param_pspec(path: str, shape: tuple[int, ...], mesh, *,
+                stacked_layers: bool, fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    path: jax.tree_util.keystr of the leaf inside the *params* pytree
+    (no client axis); shape likewise.
+    """
+    msize = _axis_size(mesh, "model")
+    ndim = len(shape)
+    spec: list[Any] = [None] * ndim
+    lead = 1 if (stacked_layers and "blocks" in path) else 0
+
+    model_dim = None
+    if re.search(r"\['w[kv]'\]$", path) and ndim - lead == 2:
+        # GQA K/V projections: shard only when whole KV heads divide the
+        # model axis — splitting a head across shards forces S×S-sized
+        # attention reshards (17 GB fp32 ARs per layer at Jamba scale,
+        # EXPERIMENTS.md §Perf iteration 3).  KV-head count is not in the
+        # path, so use the feature-dim heuristic: replicate unless the flat
+        # KV feature dim gives ≥ one whole (≤128-wide) head per shard.
+        if shape[-1] % msize == 0 and shape[-1] // msize >= 128:
+            model_dim = -1
+    elif _EXPERT_RULE.search(path) and ndim - lead >= 3:
+        # expert stack [.., E, in, out]: shard experts
+        model_dim = lead  # the E dim
+    else:
+        for pat, dim in _MODEL_DIM_RULES:
+            if re.search(pat, path):
+                if dim is None:
+                    model_dim = None
+                else:
+                    model_dim = dim if dim < 0 else lead + dim
+                break
+        else:
+            # fallback: largest dim (excluding layer-stack dim) divisible
+            cand = [(s, i) for i, s in enumerate(shape)
+                    if i >= lead and s % msize == 0 and s >= 2 * msize]
+            model_dim = max(cand)[1] if cand else None
+
+    if model_dim is not None:
+        md = model_dim % ndim
+        if shape[md] % msize == 0 and md >= lead:
+            spec[md] = "model"
+        else:
+            # divisibility guard failed → try fallback largest divisible dim
+            cand = [(s, i) for i, s in enumerate(shape)
+                    if i >= lead and s % msize == 0 and s >= 2 * msize
+                    and spec[i] is None]
+            if cand:
+                spec[max(cand)[1]] = "model"
+
+    if fsdp and _EXPERT_RULE.search(path):
+        # (§Perf iteration 5b: FSDP on embed/unembed turned the logits
+        # matmul into fp32 [B,S,V/16]-sized data-axis partial sums — 17 GB
+        # per step; vocab-sharded-over-model tables are 67 MB/device and
+        # simply replicate over data.)
+        # FSDP ("data"-axis weight sharding) is restricted to the MoE expert
+        # stacks + embeddings — the only leaves whose replicated copies don't
+        # fit.  §Perf iterations 1-4: (1) FSDP on tiny SSM params made GSPMD
+        # gather 68 GB fp32 activations per Mamba chunk; (4) FSDP on dense
+        # FFN / projection weights turned their contractions into
+        # activation-sized partial-sum all-reduces (12.9 GB fp32 per FFN
+        # layer at global batch 256×4k) — ~100× the cost of replicating the
+        # weight and all-reducing its gradient instead.
+        dsize = _axis_size(mesh, "data")
+        total_elems = 1
+        for s in shape[lead:]:
+            total_elems *= s
+        if total_elems >= (1 << 24):
+            cand = [(s, i) for i, s in enumerate(shape)
+                    if i >= lead and spec[i] is None and s % dsize == 0
+                    and s >= 8 * dsize]
+            if cand:
+                spec[max(cand)[1]] = "data"
+
+    return P(*spec)
+
+
+SMALL_MODEL_ELEMS = int(5e8)
+
+
+def total_elems(param_shapes: Any) -> int:
+    return sum(int(np.prod(l.shape)) for l in
+               jax.tree_util.tree_leaves(param_shapes))
+
+
+def params_shardings(param_shapes: Any, mesh, *, stacked_layers: bool = True,
+                     fsdp: bool = False, small_replicate: bool = True) -> Any:
+    """Tree of NamedShardings matching a params ShapeDtypeStruct tree.
+
+    Models below SMALL_MODEL_ELEMS replicate entirely — tensor-parallelism
+    on a 125M model trades negligible memory for per-layer activation
+    all-reduces that dominate its roofline (§Perf iteration 9: xlstm-125m
+    was the last collective-bound family).
+    """
+    if small_replicate and total_elems(param_shapes) < SMALL_MODEL_ELEMS \
+            and not fsdp:
+        return jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), param_shapes)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        spec = param_pspec(path, leaf.shape, mesh,
+                           stacked_layers=stacked_layers, fsdp=fsdp)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def client_stacked_shardings(param_shapes: Any, mesh, *,
+                             fsdp: bool = False) -> Any:
+    """Shardings for [K, ...] client-stacked params: K over dp axes."""
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    small = sum(int(np.prod(l.shape[1:])) for l in
+                jax.tree_util.tree_leaves(param_shapes)) < SMALL_MODEL_ELEMS
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        if small:
+            base = P(*([None] * (len(leaf.shape) - 1)))
+        else:
+            base = param_pspec(path, leaf.shape[1:], mesh,
+                               stacked_layers=True, fsdp=fsdp)
+        out.append(NamedSharding(mesh, P(dp_spec, *base)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_shapes: Any, mesh, *, client_axis: bool,
+                    shard_model_batch: bool = False) -> Any:
+    """Batch pytree: leading K (client) or B (batch) dim over dp axes."""
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    K = int(np.prod([_axis_size(mesh, a) for a in dp]))
+
+    msize = _axis_size(mesh, "model")
+
+    def one(leaf):
+        lead = leaf.shape[0]
+        first = dp_spec if lead % K == 0 and lead >= K else None
+        rest = [None] * (len(leaf.shape) - 1)
+        # small-model DP: also shard the per-client batch dim over "model"
+        # (the model axis is otherwise idle when params replicate)
+        if shard_model_batch and first is not None and len(leaf.shape) > 1                 and leaf.shape[1] % msize == 0 and leaf.shape[1] >= msize:
+            rest[0] = "model"
+        return NamedSharding(mesh, P(first, *rest))
+
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes: Any, mesh, batch: int) -> Any:
+    """Decode caches: [R, B, ...] leaves — batch over dp if divisible; the
+    large per-token dim (KV seq / di) over "model"; for batch=1 the KV seq
+    additionally shards over "data"."""
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    K = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    msize = _axis_size(mesh, "model")
+    dsize = K
+
+    def one(leaf):
+        shp = leaf.shape
+        spec: list[Any] = [None] * len(shp)
+        # leaf layout: [R, B, ...]
+        if len(shp) >= 2 and batch % K == 0 and shp[1] == batch and batch >= K:
+            spec[1] = dp_spec
+            rest_axes = ("model",)
+        else:
+            rest_axes = ("data", "model") if batch == 1 else ("model",)
+        # shard the largest remaining dim that divides
+        total = int(np.prod([_axis_size(mesh, a) for a in
+                             (rest_axes if isinstance(rest_axes, tuple)
+                              else (rest_axes,))]))
+        cand = [(s, i) for i, s in enumerate(shp)
+                if i >= 2 and spec[i] is None and s % total == 0
+                and s >= total]
+        if cand:
+            i = max(cand)[1]
+            spec[i] = rest_axes if len(rest_axes) > 1 else rest_axes[0]
+        else:
+            # fall back to model-only on the largest dim divisible by msize
+            cand = [(s, i) for i, s in enumerate(shp)
+                    if i >= 2 and spec[i] is None and s % msize == 0
+                    and s >= msize]
+            if cand:
+                spec[max(cand)[1]] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, cache_shapes)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

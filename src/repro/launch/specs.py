@@ -1,0 +1,154 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every
+(architecture × input-shape) program — weak-type-correct, shardable, zero
+device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs
+from ..configs.base import ArchConfig
+from ..configs.shapes import SHAPES, InputShape
+from ..fl.distributed import (DistFLState, fl_train_step,
+                              fl_train_step_masked_dp, init_dist_state,
+                              mode_for)
+from ..models import transformer as T
+from . import sharding as SH
+from .mesh import dp_axes, num_clients
+
+
+class ProgramSpec(NamedTuple):
+    name: str
+    fn: Callable          # positional-args pure function to jit
+    args: tuple           # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _model_dtype(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _train_batch_struct(cfg: ArchConfig, K: int, B_per: int, S: int):
+    if cfg.embeds_input:
+        return {"embeds": _sds((K, B_per, S, cfg.d_model), _model_dtype(cfg)),
+                "labels": _sds((K, B_per, S), jnp.int32)}
+    return {"tokens": _sds((K, B_per, S), jnp.int32)}
+
+
+def input_specs(arch: str, shape_name: str, mesh,
+                lr: float = 0.01, cfg_override: ArchConfig | None = None,
+                mode_override: str | None = None) -> ProgramSpec:
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or configs.get(arch, shape)
+    K = num_clients(mesh)
+
+    if shape.kind == "train":
+        mode = mode_override or mode_for(cfg)
+        B_per = max(shape.global_batch // K, 1)
+        state_struct = jax.eval_shape(
+            lambda: init_dist_state(jax.random.PRNGKey(0), cfg, K, mode=mode))
+        fsdp = mode == "masked_dp"
+        gshard = SH.params_shardings(state_struct.global_params, mesh,
+                                     fsdp=fsdp)
+        if mode == "replica":
+            cshard = SH.client_stacked_shardings(state_struct.client_params,
+                                                 mesh)
+            state_shard = DistFLState(gshard, cshard, cshard)
+        else:
+            state_shard = DistFLState(gshard, None, None)
+        batch_struct = _train_batch_struct(cfg, K, B_per, shape.seq_len)
+        from ..fl.distributed import param_count as _pc
+        small = _pc(cfg) < SH.SMALL_MODEL_ELEMS and mode == "replica"
+        batch_shard = SH.batch_shardings(batch_struct, mesh, client_axis=True,
+                                         shard_model_batch=small)
+        mask_struct = _sds((K,), jnp.float32)
+        repl = SH.replicated(mesh)
+        metrics_shard = {"loss": repl, "participants": repl}
+
+        if mode == "replica":
+            # gradient accumulation for big replica-mode archs (§Perf):
+            # activation memory ∝ per-client batch / micro_batches
+            from ..fl.distributed import param_count
+            micro = 8 if param_count(cfg) > 1.5e10 else 1
+            while B_per % micro != 0:
+                micro //= 2
+
+            def fn(state, batch, mask):
+                return fl_train_step.__wrapped__(state, cfg, batch, mask, lr,
+                                                 1, micro)
+            args = (state_struct, batch_struct, mask_struct)
+            in_sh = (state_shard, batch_shard, repl)
+        else:
+            probs_struct = _sds((K,), jnp.float32)
+
+            def fn(state, batch, mask, probs):
+                return fl_train_step_masked_dp.__wrapped__(
+                    state, cfg, batch, mask, probs, lr)
+            args = (state_struct, batch_struct, mask_struct, probs_struct)
+            in_sh = (state_shard, batch_shard, repl, repl)
+        return ProgramSpec(
+            name=f"{arch}:{shape_name}", fn=fn, args=args, in_shardings=in_sh,
+            out_shardings=(state_shard, metrics_shard),
+            meta={"cfg": cfg, "mode": mode, "kind": "train", "K": K,
+                  "B_per": B_per, "seq": shape.seq_len})
+
+    params_struct = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    # prefill keeps TP even for small models (full-sequence compute amortizes
+    # the per-layer ARs; pure-DP replication regressed xlstm prefill 3.6× —
+    # §Perf iteration 9 refinement); decode benefits from replication.
+    pshard = SH.params_shardings(params_struct, mesh,
+                                 small_replicate=shape.kind != "prefill")
+    B = shape.global_batch
+    repl = SH.replicated(mesh)
+
+    if shape.kind == "prefill":
+        S = shape.seq_len
+        if cfg.embeds_input:
+            batch = {"embeds": _sds((B, S, cfg.d_model), _model_dtype(cfg))}
+        else:
+            batch = {"tokens": _sds((B, S), jnp.int32)}
+        bshard = SH.batch_shardings(batch, mesh, client_axis=False)
+        cache_struct = jax.eval_shape(lambda: T.init_caches(cfg, B, S))
+        cache_shard = SH.cache_shardings(cache_struct, mesh, B)
+
+        def fn(params, batch):
+            logits, caches = T.prefill(params, cfg, capacity=S, **batch)
+            # greedy next token — serving returns tokens, not a V-wide tensor
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+        return ProgramSpec(
+            name=f"{arch}:{shape_name}", fn=fn, args=(params_struct, batch),
+            in_shardings=(pshard, bshard),
+            out_shardings=(repl, cache_shard),
+            meta={"cfg": cfg, "kind": "prefill", "B": B, "seq": S})
+
+    # decode
+    S = shape.seq_len
+    cache_struct = jax.eval_shape(lambda: T.init_caches(cfg, B, S))
+    # pretend the cache is full (pos = S)
+    cache_shard = SH.cache_shardings(cache_struct, mesh, B)
+    token = _sds((B, 1), jnp.int32)
+    tshard = SH.batch_shardings({"t": token}, mesh, client_axis=False)["t"]
+
+    def fn(params, token, caches):
+        logits, caches = T.decode_step(params, cfg, token, caches)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    return ProgramSpec(
+        name=f"{arch}:{shape_name}", fn=fn,
+        args=(params_struct, token, cache_struct),
+        in_shardings=(pshard, tshard, cache_shard),
+        out_shardings=(tshard, cache_shard),
+        meta={"cfg": cfg, "kind": "decode", "B": B, "seq": S})

@@ -1,0 +1,8 @@
+"""Model zoo: small paper models + the generic multi-family decoder stack."""
+from . import attention, layers, mamba, moe, small, transformer, xlstm
+from .transformer import (decode_step, forward, init_caches, init_params,
+                          loss, prefill)
+
+__all__ = ["attention", "layers", "mamba", "moe", "small", "transformer",
+           "xlstm", "init_params", "forward", "loss", "prefill",
+           "decode_step", "init_caches"]

@@ -1,0 +1,38 @@
+"""Cost-probe mode for roofline accounting.
+
+XLA's HLOCostAnalysis counts a while/scan body ONCE regardless of trip count
+(verified: scan of L matmuls reports the flops of one).  The roofline
+therefore lowers two extra *cost probes* per (arch × shape): 1- and
+2-super-block variants with
+
+  * the layer stack unrolled as a Python loop (no scan), and
+  * direct (non-chunked) sequence mixers — the chunked forms hide their
+    bodies inside scans; the direct forms materialize abstractly (no
+    allocation happens at lowering) and count exactly.
+
+Total-per-device metric M(R) is then reconstructed exactly as
+``M(1) + (R−1)·(M(2) − M(1))`` — the difference isolates one super-block
+including its collectives; embed/logits/aggregation appear once in both and
+cancel.  (sLSTM keeps its true time recurrence — corrected analytically in
+benchmarks/roofline.py.)
+"""
+from __future__ import annotations
+
+import contextlib
+
+_COST_MODE = False
+
+
+def cost_mode() -> bool:
+    return _COST_MODE
+
+
+@contextlib.contextmanager
+def cost_probe():
+    global _COST_MODE
+    prev = _COST_MODE
+    _COST_MODE = True
+    try:
+        yield
+    finally:
+        _COST_MODE = prev

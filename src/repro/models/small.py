@@ -1,0 +1,104 @@
+"""Small experiment models from the paper (§V-A).
+
+* ``mlp``: the paper's MNIST classifier — one hidden layer, 200 units
+  (model size 6.37e6 bits ≈ 199,210 fp32 params: 784·200+200+200·10+10).
+* ``cnn``: AlexNet stand-in for the CIFAR-10-like experiments (the paper uses
+  AlexNet @ 4.57e8 bits; we use a narrower conv net with the same role —
+  documented deviation for a 1-core CPU container).
+
+Functional style: ``init(key) -> params``, ``loss(params, x, y)``,
+``accuracy(params, x, y)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, n_in, n_out):
+    k1, k2 = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / n_in)
+    return {"w": jax.random.normal(k1, (n_in, n_out)) * scale,
+            "b": jnp.zeros((n_out,))}
+
+
+def cross_entropy(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# MLP (paper's MNIST model)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, dims=(784, 200, 10)):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [_dense_init(k, i, o) for k, i, o in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp_logits(params, x):
+    x = x.reshape(x.shape[0], -1)
+    for layer in params[:-1]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    last = params[-1]
+    return x @ last["w"] + last["b"]
+
+
+def mlp_loss(params, x, y):
+    return cross_entropy(mlp_logits(params, x), y)
+
+
+def mlp_accuracy(params, x, y):
+    return jnp.mean((jnp.argmax(mlp_logits(params, x), -1) == y)
+                    .astype(jnp.float32))
+
+
+def mlp_size_bits(params) -> int:
+    return sum(int(l.size) for l in jax.tree_util.tree_leaves(params)) * 32
+
+
+# ---------------------------------------------------------------------------
+# CNN (AlexNet stand-in for CIFAR-like data)
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, k, c_in, c_out):
+    scale = jnp.sqrt(2.0 / (k * k * c_in))
+    return {"w": jax.random.normal(key, (k, k, c_in, c_out)) * scale,
+            "b": jnp.zeros((c_out,))}
+
+
+def init_cnn(key: jax.Array, widths=(32, 64, 128), fc=256, num_classes=10):
+    keys = jax.random.split(key, len(widths) + 2)
+    params = {"convs": [], "fc1": None, "fc2": None}
+    c_in = 3
+    for i, w in enumerate(widths):
+        params["convs"].append(_conv_init(keys[i], 3, c_in, w))
+        c_in = w
+    spatial = 32 // (2 ** len(widths))
+    params["fc1"] = _dense_init(keys[-2], spatial * spatial * c_in, fc)
+    params["fc2"] = _dense_init(keys[-1], fc, num_classes)
+    return params
+
+
+def cnn_logits(params, x):
+    for conv in params["convs"]:
+        x = jax.lax.conv_general_dilated(
+            x, conv["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + conv["b"]
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def cnn_loss(params, x, y):
+    return cross_entropy(cnn_logits(params, x), y)
+
+
+def cnn_accuracy(params, x, y):
+    return jnp.mean((jnp.argmax(cnn_logits(params, x), -1) == y)
+                    .astype(jnp.float32))

@@ -1,0 +1,8 @@
+"""Minimal optimizer library (optax-style pure functions, no dependency).
+
+The paper trains with plain SGD (lr 0.01); momentum and Adam are provided for
+the beyond-paper experiments and the mega-arch trainer.
+"""
+from .optim import Optimizer, adam, momentum, sgd
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam"]

@@ -1,0 +1,60 @@
+"""Pure-function optimizers over pytrees."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        upd = jax.tree_util.tree_map(lambda g: -lr * g, grads)
+        return upd, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        state = jax.tree_util.tree_map(lambda m, g: beta * m + g, state, grads)
+        upd = jax.tree_util.tree_map(lambda m: -lr * m, state)
+        return upd, state
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return (zeros, jax.tree_util.tree_map(jnp.zeros_like, params),
+                jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        m, v, t = state
+        t = t + 1
+        m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, m, grads)
+        v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, v, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = jax.tree_util.tree_map(
+            lambda m_, v_: -lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps), m, v)
+        return upd, (m, v, t)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, upd):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, upd)

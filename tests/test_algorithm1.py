@@ -1,0 +1,142 @@
+"""Algorithm 1 (offline) and the online variant: feasibility, KKT residuals,
+global optimality vs brute force on small instances, and the paper's
+qualitative insights (Lemmas 2-3)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CellConfig, ProblemSpec
+from repro.core import algorithm1 as a1
+from repro.core.channel import channel_gains, sample_positions, rate_nats
+from repro.core.online import objective_p1_prime, solve_online
+
+
+def make_instance(seed=0, K=10, T=20, rho=0.05, lam=0.01):
+    cell = CellConfig(num_clients=K)
+    spec = ProblemSpec(cell=cell, rho=rho, lam=lam, num_rounds=T)
+    pos = sample_positions(jax.random.PRNGKey(seed), cell)
+    h = channel_gains(jax.random.PRNGKey(seed + 1), pos, T).T  # [K, T]
+    return spec, h
+
+
+def test_offline_feasible_and_converged():
+    spec, h = make_instance()
+    res = a1.solve(h, spec)
+    p, w = np.asarray(res.p), np.asarray(res.w)
+    assert p.shape == (spec.K, spec.T) and w.shape == (spec.K, spec.T)
+    assert np.all(p >= spec.lam - 1e-6) and np.all(p <= 1.0 + 1e-6)
+    assert np.all(w >= 0.0) and np.all(w.sum(axis=0) <= 1.0 + 1e-4)
+    assert float(res.residual) < 1e-6
+    assert np.isfinite(float(res.objective))
+
+
+def test_offline_beats_naive_allocations():
+    spec, h = make_instance()
+    res = a1.solve(h, spec)
+    K, T = spec.K, spec.T
+    for p_const in (0.05, 0.1, 0.3, 0.7, 1.0):
+        p = jnp.full((K, T), p_const)
+        w = jnp.full((K, T), 1.0 / K)
+        naive = float(a1.objective_p1(p, w, h, spec))
+        assert float(res.objective) <= naive * 1.001, p_const
+
+
+def _grid_best(spec, h_pair, objective):
+    """Vectorized exhaustive grid over (p1, p2, w1) for a K=2 instance."""
+    ps = jnp.linspace(spec.lam, 1.0, 61)
+    ws = jnp.linspace(1e-3, 1.0 - 1e-3, 121)
+    P1, P2, W1 = jnp.meshgrid(ps, ps, ws, indexing="ij")
+    flat = jax.jit(jax.vmap(lambda p1, p2, w1: objective(
+        jnp.stack([p1, p2])[:, None], jnp.stack([w1, 1.0 - w1])[:, None],
+        h_pair, spec)))
+    objs = flat(P1.ravel(), P2.ravel(), W1.ravel())
+    return float(jnp.min(objs))
+
+
+def test_offline_matches_bruteforce_small():
+    """K=2, T=1: exhaustive grid over (p1, p2, w1) — the solver must match the
+    global optimum of (P1) within grid resolution."""
+    cell = CellConfig(num_clients=2)
+    spec = ProblemSpec(cell=cell, rho=0.2, lam=0.01, num_rounds=1)
+    h = jnp.array([[3e-13], [4e-14]])
+    res = a1.solve(h, spec)
+    best = _grid_best(spec, h, a1.objective_p1)
+    assert float(res.objective) <= best * 1.02 + 1e-6
+
+
+def test_online_feasible_and_converged():
+    spec, h = make_instance()
+    res = solve_online(h[:, 0], spec)
+    p, w = np.asarray(res.p), np.asarray(res.w)
+    assert np.all(p >= spec.lam - 1e-6) and np.all(p <= 1.0 + 1e-6)
+    assert np.all(w >= 0.0) and float(w.sum()) <= 1.0 + 1e-3
+    assert float(res.residual) < 1e-6
+
+
+def test_online_matches_bruteforce_small():
+    cell = CellConfig(num_clients=2)
+    spec = ProblemSpec(cell=cell, rho=0.2, lam=0.01, num_rounds=10)
+    h = jnp.array([3e-13, 4e-14])
+    res = solve_online(h, spec)
+    best = _grid_best(
+        spec, h,
+        lambda p, w, hh, sp: objective_p1_prime(p[:, 0], w[:, 0], hh, sp))
+    assert float(res.objective) <= best * 1.02 + 1e-6
+
+
+def test_channel_aware_participation():
+    """Better channels ⇒ (weakly) higher selection probability — the
+    multi-user-diversity insight behind individual Δ_k."""
+    cell = CellConfig(num_clients=8)
+    spec = ProblemSpec(cell=cell, rho=0.05, lam=0.01, num_rounds=10)
+    h = jnp.logspace(-15, -11, 8)  # strictly increasing gains
+    res = solve_online(h, spec)
+    p = np.asarray(res.p)
+    # top-gain client participates at least as much as bottom-gain client
+    assert p[-1] >= p[0] - 1e-4
+    # rank correlation positive
+    corr = np.corrcoef(np.arange(8), p)[0, 1]
+    assert corr > 0.5
+
+
+def test_rho_tradeoff_lemma2():
+    """Larger ρ (convergence-focused) ⇒ more participation & more energy;
+    Lemma 2: more communication improves the convergence metric."""
+    spec_lo, h = make_instance(rho=0.01)
+    spec_hi, _ = make_instance(rho=0.3)
+    r_lo = a1.solve(h, spec_lo)
+    r_hi = a1.solve(h, spec_hi)
+    sum_lo, sum_hi = float(r_lo.p.sum()), float(r_hi.p.sum())
+    assert sum_hi > sum_lo
+    from repro.core.convergence import convergence_metric
+    assert float(convergence_metric(r_hi.p)) < float(convergence_metric(r_lo.p))
+
+
+def test_p4_bisection_matches_subgradient():
+    """The bisection dual search and the paper's subgradient loop (33) find
+    the same bandwidth allocation."""
+    cell = CellConfig(num_clients=6)
+    key = jax.random.PRNGKey(3)
+    ab = jnp.abs(jax.random.normal(key, (6,))) * 1e-7 + 1e-8
+    h = jnp.logspace(-14, -12, 6)
+    w_b = np.asarray(a1.solve_p4(ab, h, cell))
+    w_s = np.asarray(a1.solve_p4_subgradient(ab, h, cell, iters=4000))
+    # subgradient converges slowly; match within a loose tolerance
+    assert np.allclose(w_b, w_s, atol=0.05)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.floats(min_value=0.01, max_value=0.5))
+def test_property_feasibility_random_instances(seed, rho):
+    spec, h = make_instance(seed=seed, K=5, T=6, rho=rho)
+    res = a1.solve(h, spec, max_outer=300)
+    p, w = np.asarray(res.p), np.asarray(res.w)
+    assert np.all(p >= spec.lam - 1e-5) and np.all(p <= 1.0 + 1e-5)
+    assert np.all(w >= 0) and np.all(w.sum(0) <= 1.0 + 1e-3)
+    assert np.isfinite(float(res.objective))

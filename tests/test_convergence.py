@@ -1,0 +1,74 @@
+"""Convergence-analysis expressions (Lemma 1, eqs. 7-10, Lemma 3)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.convergence import (convergence_metric, delta_prime,
+                                    expected_delta, lemma1_bound,
+                                    theorem1_bound)
+
+
+def test_delta_prime_eq8():
+    p = jnp.full((3, 10), 0.5)
+    # Δ' = T / Σ p = 10/5 = 2
+    assert np.allclose(np.asarray(delta_prime(p)), 2.0)
+
+
+def test_expected_delta_geometric():
+    """For constant p, eq. (7) approaches the geometric mean (1-p)/p as T→∞."""
+    p_val = 0.4
+    p = jnp.full((1, 400), p_val)
+    e = float(expected_delta(p)[0])
+    assert np.isclose(e, (1 - p_val) / p_val, atol=1e-2)
+
+
+def test_lemma1_monotone_in_delta():
+    """Smaller Δ_k ⇒ tighter bound (the Lemma 1 insight)."""
+    args = dict(eta=0.01, L=1.0, g_max=5.0, sigma=0.1, f_max=2.0, T=100)
+    b_small = float(lemma1_bound(delta=jnp.full((4,), 2.0), **args))
+    b_large = float(lemma1_bound(delta=jnp.full((4,), 10.0), **args))
+    assert b_small < b_large
+
+
+def test_theorem1_reduces_to_lemma1():
+    p = jnp.full((4, 50), 0.25)  # Δ' = 4
+    args = dict(eta=0.01, L=1.0, g_max=5.0, sigma=0.1, f_max=2.0)
+    assert np.isclose(float(theorem1_bound(p=p, **args)),
+                      float(lemma1_bound(T=50, delta=jnp.full((4,), 4.0), **args)))
+
+
+def test_lemma3_fairness_optimal():
+    """Lemma 3: with a fixed communication budget Σ 1/Δ'_k, the metric is
+    minimized by equal Δ'_k (fair participation)."""
+    T, K = 60, 4
+    budget = 1.2  # Σ_k Σ_t p_{k,t} / T = Σ 1/Δ'
+    fair = jnp.full((K, T), budget / K)
+    unfair = jnp.stack([
+        jnp.full((T,), 0.6), jnp.full((T,), 0.3),
+        jnp.full((T,), 0.2), jnp.full((T,), 0.1)])
+    assert np.isclose(float(jnp.sum(fair.sum(1))), float(jnp.sum(unfair.sum(1))))
+    assert float(convergence_metric(fair)) < float(convergence_metric(unfair))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=0.05, max_value=1.0), min_size=2,
+                max_size=6))
+def test_property_metric_dominated_by_fair_split(ps):
+    """Any participation split is ≥ the fair split with the same budget."""
+    K = len(ps)
+    T = 20
+    p = jnp.tile(jnp.asarray(ps)[:, None], (1, T))
+    fair = jnp.full((K, T), float(np.mean(ps)))
+    assert float(convergence_metric(fair)) <= float(convergence_metric(p)) + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(min_value=0.02, max_value=0.9),
+       st.floats(min_value=0.02, max_value=0.09))
+def test_property_lemma2_more_communication_helps(p_hi, dp):
+    """Raising every probability lowers the metric (Lemma 2)."""
+    T, K = 15, 3
+    lo = jnp.full((K, T), p_hi)
+    hi = jnp.full((K, T), min(p_hi + dp, 1.0))
+    assert float(convergence_metric(hi)) <= float(convergence_metric(lo)) + 1e-9

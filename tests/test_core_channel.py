@@ -1,0 +1,82 @@
+"""Unit tests: wireless channel model (paper eqs. 4-5, Table II)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import (CellConfig, LN2, channel_gains, path_gain,
+                                path_loss_db, rate_bits, rate_nats,
+                                sample_positions, tx_energy_j)
+
+CELL = CellConfig()
+
+
+def test_path_loss_matches_table2():
+    # 128.1 + 37.6 log10(r_km): at 1 km the loss is exactly 128.1 dB
+    assert np.isclose(float(path_loss_db(jnp.array(1000.0))), 128.1, atol=1e-4)
+    # at 100 m: 128.1 - 37.6 = 90.5 dB
+    assert np.isclose(float(path_loss_db(jnp.array(100.0))), 90.5, atol=1e-4)
+
+
+def test_rate_matches_shannon():
+    w, h = 0.1, 1e-13
+    W, N0, P = CELL.bandwidth_hz, CELL.noise_w_per_hz, CELL.tx_power_w
+    snr = P * h / (w * W * N0)
+    expect_bits = w * W * np.log2(1 + snr)
+    got = float(rate_bits(jnp.array(w), jnp.array(h), P, W, N0))
+    assert np.isclose(got, expect_bits, rtol=1e-5)
+    assert np.isclose(float(rate_nats(jnp.array(w), jnp.array(h), P, W, N0)),
+                      expect_bits * LN2, rtol=1e-5)
+
+
+def test_rate_zero_bandwidth_is_zero_limit():
+    W, N0, P = CELL.bandwidth_hz, CELL.noise_w_per_hz, CELL.tx_power_w
+    r = float(rate_nats(jnp.array(0.0), jnp.array(1e-13), P, W, N0))
+    assert r >= 0.0 and r < 1.0  # w·ln(1+c/w) → 0 as w → 0
+
+
+def test_rate_monotone_in_bandwidth_and_gain():
+    W, N0, P = CELL.bandwidth_hz, CELL.noise_w_per_hz, CELL.tx_power_w
+    ws = jnp.linspace(0.01, 1.0, 32)
+    r = np.asarray(rate_nats(ws, jnp.array(1e-13), P, W, N0))
+    assert np.all(np.diff(r) > 0)
+    hs = jnp.logspace(-16, -11, 32)
+    r = np.asarray(rate_nats(jnp.array(0.1), hs, P, W, N0))
+    assert np.all(np.diff(r) > 0)
+
+
+def test_energy_eq5():
+    # E = p·P·S/R with S in bits and R in bits/s == S_nats / R_nats
+    W, N0, P = CELL.bandwidth_hz, CELL.noise_w_per_hz, CELL.tx_power_w
+    p, w, h = 0.5, 0.2, 1e-13
+    R_b = float(rate_bits(jnp.array(w), jnp.array(h), P, W, N0))
+    expect = p * P * CELL.model_size_bits / R_b
+    got = float(tx_energy_j(jnp.array(p), jnp.array(w), jnp.array(h), P, W,
+                            N0, CELL.model_size_nats))
+    assert np.isclose(got, expect, rtol=1e-5)
+
+
+def test_positions_within_cell():
+    pos = sample_positions(jax.random.PRNGKey(0), CELL)
+    assert pos.shape == (CELL.num_clients,)
+    assert float(pos.min()) >= CELL.min_radius_m
+    assert float(pos.max()) <= CELL.cell_radius_m
+
+
+def test_positions_annulus():
+    pos = sample_positions(jax.random.PRNGKey(0), CELL, r_min=900., r_max=1000.)
+    assert float(pos.min()) >= 900.0 and float(pos.max()) <= 1000.0
+
+
+def test_channel_gains_shape_and_positivity():
+    pos = sample_positions(jax.random.PRNGKey(0), CELL)
+    h = channel_gains(jax.random.PRNGKey(1), pos, 7)
+    assert h.shape == (7, CELL.num_clients)
+    assert bool(jnp.all(h > 0))
+
+
+def test_fading_is_unit_mean():
+    pos = jnp.full((CELL.num_clients,), 500.0)
+    h = channel_gains(jax.random.PRNGKey(2), pos, 4000)
+    mean_ratio = jnp.mean(h / path_gain(pos)[None, :])
+    assert np.isclose(float(mean_ratio), 1.0, atol=0.05)

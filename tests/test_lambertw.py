@@ -1,0 +1,48 @@
+"""Unit + property tests for the pure-JAX Lambert W (principal branch)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.lambertw import INV_E, lambertw
+
+
+def test_known_values():
+    assert np.isclose(float(lambertw(jnp.array(0.0))), 0.0, atol=1e-7)
+    assert np.isclose(float(lambertw(jnp.array(np.e))), 1.0, atol=1e-6)
+    assert np.isclose(float(lambertw(jnp.array(-INV_E))), -1.0, atol=1e-6)
+    # W(1) = Omega constant
+    assert np.isclose(float(lambertw(jnp.array(1.0))), 0.5671432904, atol=1e-6)
+
+
+def test_inverse_property_grid():
+    # dense grid over the paper's operating range [-1/e, 0) plus positives
+    x = np.concatenate([
+        np.linspace(-INV_E + 1e-7, -1e-8, 301),
+        np.linspace(1e-6, 50.0, 100),
+    ]).astype(np.float32)
+    w = np.asarray(lambertw(jnp.asarray(x)))
+    err = np.abs(w * np.exp(w) - x)
+    scale = np.maximum(np.abs(x), 1e-6)
+    assert np.max(err / scale) < 1e-4
+
+
+def test_nan_outside_domain():
+    assert np.isnan(float(lambertw(jnp.array(-0.5))))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(min_value=-INV_E + 1e-6, max_value=100.0,
+                 allow_nan=False, allow_infinity=False))
+def test_inverse_property_hypothesis(x):
+    w = float(lambertw(jnp.float32(x)))
+    assert np.isfinite(w)
+    assert np.isclose(w * np.exp(w), x, rtol=2e-3, atol=2e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(min_value=1.0, max_value=40.0))
+def test_paper_operating_branch(A):
+    """The bandwidth formula evaluates W0(-exp(-A)) for A >= 1: result in [-1, 0)."""
+    w = float(lambertw(jnp.float32(-np.exp(-A))))
+    assert -1.0 <= w < 0.0

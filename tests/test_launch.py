@@ -1,0 +1,129 @@
+"""Launch layer: HLO collective parser, sharding policy rules, mesh specs,
+and one real (subprocess) dry-run combo on the production mesh."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# collective_bytes parser (pure text)
+# ---------------------------------------------------------------------------
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %x = bf16[8,128]{1,0} all-reduce(bf16[8,128]{1,0} %p), replica_groups={}
+  %y = f32[16]{0} all-gather(f32[4]{0} %q), dimensions={0}
+  %z.1 = (f32[32]{0}, u32[], u32[]) all-to-all-start(f32[32]{0} %r)
+  %z.2 = f32[32]{0} all-to-all-done((f32[32],u32[],u32[]) %z.1)
+  %w = f32[64]{0} add(f32[64]{0} %a, f32[64]{0} %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["bytes"]["all-reduce"] == 8 * 128 * 2
+    assert out["bytes"]["all-gather"] == 16 * 4
+    # async pair counted once (start only)
+    assert out["counts"]["all-to-all"] == 1
+    assert out["bytes"]["collective-permute"] == 0
+
+
+def test_bytes_of_shape_tuple():
+    from repro.launch.dryrun import _bytes_of_shape
+    assert _bytes_of_shape("bf16[2,3]") == 12
+    assert _bytes_of_shape("(f32[4], u32[2])") == 16 + 8
+    assert _bytes_of_shape("token[]") == 0
+
+
+# ---------------------------------------------------------------------------
+# sharding policy rules (no devices needed — pure spec logic)
+# ---------------------------------------------------------------------------
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    devices = np.empty((16, 16), object)
+
+
+def test_param_pspec_rules():
+    from repro.launch.sharding import param_pspec
+    mesh = FakeMesh()
+    # embed vocab-sharded
+    assert param_pspec("['embed']", (128256, 2048), mesh,
+                       stacked_layers=True)[0] == "model"
+    # attention in-proj shards output features; out-proj shards input
+    p = param_pspec("['blocks'][0]['mixer']['wq']", (16, 2048, 2048), mesh,
+                    stacked_layers=True)
+    assert p[2] == "model" and p[0] is None
+    p = param_pspec("['blocks'][0]['mixer']['wo']", (16, 2048, 2048), mesh,
+                    stacked_layers=True)
+    assert p[1] == "model"
+    # experts shard the E dim
+    p = param_pspec("['blocks'][0]['ffn']['w1']", (16, 128, 2048, 768), mesh,
+                    stacked_layers=True)
+    assert p[1] == "model" and p[0] is None
+    # norms replicate
+    p = param_pspec("['blocks'][0]['ln1']", (16, 2048), mesh,
+                    stacked_layers=True)
+    assert all(x is None for x in p)
+    # GQA K/V policy (§Perf iter 3): replicate when a shard would hold less
+    # than one whole head (1536/16 = 96 < 128) …
+    p = param_pspec("['blocks'][0]['mixer']['wk']", (48, 1536, 1536), mesh,
+                    stacked_layers=True)
+    assert all(x is None for x in p)
+    # … shard when every shard holds ≥ one whole head (2048/16 = 128)
+    p = param_pspec("['blocks'][0]['mixer']['wk']", (48, 2048, 2048), mesh,
+                    stacked_layers=True)
+    assert p[2] == "model"
+
+
+def test_param_pspec_fsdp_adds_data_axis():
+    from repro.launch.sharding import param_pspec
+    p = param_pspec("['blocks'][0]['ffn']['w1']", (36, 16, 8192, 24576),
+                    FakeMesh(), stacked_layers=True, fsdp=True)
+    assert "model" in p and "data" in p
+
+
+# ---------------------------------------------------------------------------
+# real dry-run in a subprocess (owns its 512 fake devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_combo(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-125m",
+         "--shape", "decode_32k", "--out", str(tmp_path), "--no-probe"],
+        capture_output=True, text=True, env=env, timeout=900, cwd=REPO)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.load(open(os.path.join(
+        str(tmp_path), "xlstm-125m_decode_32k_16x16.json")))
+    assert rec["status"] == "ok"
+    assert rec["devices"] == 256
+    assert rec["cost_analysis"]["flops"] > 0
+
+
+def test_input_specs_shapes_no_devices():
+    """input_specs builds pure ShapeDtypeStructs — no allocation, any mesh."""
+    import numpy as np
+    from repro.launch.specs import input_specs
+
+    # a fake 1-device mesh is enough for spec construction? No — sharding
+    # needs real mesh axes; use the real 1-CPU device grid reshaped.
+    # Instead assert the struct builder through a tiny real mesh is covered
+    # by the subprocess test; here check the train batch struct helper.
+    from repro import configs
+    from repro.launch.specs import _train_batch_struct
+    cfg = configs.get("llama3.2-1b")
+    b = _train_batch_struct(cfg, K=16, B_per=16, S=4096)
+    assert b["tokens"].shape == (16, 16, 4096)
+    cfg2 = configs.get("musicgen-medium")
+    b2 = _train_batch_struct(cfg2, K=16, B_per=16, S=4096)
+    assert b2["embeds"].shape == (16, 16, 4096, 1536)
+    assert b2["labels"].shape == (16, 16, 4096)

@@ -1,0 +1,39 @@
+"""Empirical Lemma-1 check: smaller enforced max-interval Δ ⇒ smaller
+average squared gradient norm of the global iterates (the bound's
+(Σ Δ_k²)/K term in action), at matched everything-else."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CellConfig, ProblemSpec
+from repro.core.channel import channel_gains, sample_positions
+from repro.core.selection import RandomScheme
+from repro.data import make_mnist_like, shard_noniid
+from repro.fl import SimConfig, run_simulation
+from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
+
+
+def run_with_delta(delta, rounds=20):
+    tr, te = make_mnist_like(jax.random.PRNGKey(0), n_train=4000, n_test=400)
+    clients = shard_noniid(jax.random.PRNGKey(1), tr, 10, d=2)
+    cell = CellConfig(num_clients=10)
+    pos = sample_positions(jax.random.PRNGKey(2), cell)
+    h = channel_gains(jax.random.PRNGKey(3), pos, rounds).T
+    params = init_mlp(jax.random.PRNGKey(4))
+    cfg = SimConfig(rounds=rounds, local_iters=2, batch_size=10,
+                    eval_every=1000, max_staleness=delta)
+    # p̄ ≈ 0 ⇒ participation is (nearly) purely Δ-driven: Δ_k = delta exactly
+    res = run_simulation(params, mlp_loss, mlp_accuracy, clients, te,
+                         RandomScheme(p_bar=0.001, num_clients=10), h, cell,
+                         cfg)
+    # average squared global-gradient norm over the trajectory endpoint
+    gx, gy = tr.x[:2000], tr.y[:2000]
+    g = jax.grad(mlp_loss)(res.state.global_params, gx, gy)
+    return float(sum(jnp.sum(l ** 2) for l in jax.tree_util.tree_leaves(g)))
+
+
+def test_smaller_delta_smaller_grad_norm():
+    g2 = run_with_delta(2)
+    g10 = run_with_delta(10)
+    # Lemma 1: the Δ² term dominates the gap; tight Δ converges further
+    assert g2 < g10, (g2, g10)

@@ -1,0 +1,60 @@
+"""Consistency between the analytic parameter accounting used by the
+roofline/mode selection and the actual initialized models."""
+import jax
+import pytest
+
+from repro import configs
+from repro.fl.distributed import mode_for, param_count
+from repro.models import transformer as T
+
+try:
+    from benchmarks.roofline import active_param_count  # noqa
+    HAVE_ROOFLINE = True
+except Exception:
+    HAVE_ROOFLINE = False
+
+
+@pytest.mark.parametrize("name", configs.names())
+def test_param_count_matches_init(name):
+    cfg = configs.get(name).reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    actual = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    analytic = param_count(cfg)
+    assert analytic == actual, (analytic, actual)
+
+
+def test_full_config_param_totals():
+    """Sanity-check the headline parameter counts of the assigned configs."""
+    expect = {
+        "jamba-1.5-large-398b": (380e9, 430e9),
+        "chameleon-34b": (30e9, 38e9),
+        "llama3.2-1b": (1.0e9, 1.6e9),
+        "qwen3-moe-30b-a3b": (28e9, 33e9),
+        "llama4-maverick-400b-a17b": (370e9, 420e9),
+        "phi4-mini-3.8b": (3.3e9, 4.3e9),
+        "internlm2-1.8b": (1.5e9, 2.2e9),
+        "musicgen-medium": (1.2e9, 2.2e9),
+        "xlstm-125m": (0.09e9, 0.16e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = param_count(configs.get(name))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_mode_selection():
+    assert mode_for(configs.get("jamba-1.5-large-398b")) == "masked_dp"
+    assert mode_for(configs.get("llama4-maverick-400b-a17b")) == "masked_dp"
+    for small in ("llama3.2-1b", "qwen3-moe-30b-a3b", "chameleon-34b",
+                  "xlstm-125m"):
+        assert mode_for(configs.get(small)) == "replica"
+
+
+@pytest.mark.skipif(not HAVE_ROOFLINE, reason="benchmarks not importable")
+def test_active_params_less_than_total_for_moe():
+    for name in ("qwen3-moe-30b-a3b", "jamba-1.5-large-398b",
+                 "moonshot-v1-16b-a3b", "llama4-maverick-400b-a17b"):
+        cfg = configs.get(name)
+        assert active_param_count(cfg) < param_count(cfg)
+    # qwen3: ~3B active of ~30B
+    n_act = active_param_count(configs.get("qwen3-moe-30b-a3b"))
+    assert 2e9 < n_act < 4.5e9

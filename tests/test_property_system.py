@@ -1,0 +1,53 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.channel import CellConfig, rate_nats, tx_energy_j
+from repro.fl.state import init_fl_state, masked_aggregate, pseudo_gradients
+
+CELL = CellConfig()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 2**31 - 1))
+def test_aggregation_linearity(K, seed):
+    """eq. (3) is linear in the mask: agg(m1)+agg(m2)-global == agg(m1+m2)."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (37,))
+    d = jax.random.normal(jax.random.PRNGKey(seed + 1), (K, 37))
+    m = (jax.random.uniform(jax.random.PRNGKey(seed + 2), (K,)) < 0.5
+         ).astype(jnp.float32)
+    m2 = 1.0 - m
+    a1 = masked_aggregate(g, d, m, K)
+    a2 = masked_aggregate(g, d, m2, K)
+    both = masked_aggregate(g, d, jnp.ones((K,)), K)
+    np.testing.assert_allclose(np.asarray(a1 + a2 - g), np.asarray(both),
+                               atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.01, 0.99), st.floats(1e-15, 1e-11))
+def test_energy_monotone_decreasing_in_bandwidth(w, h):
+    e1 = float(tx_energy_j(jnp.array(1.0), jnp.array(w), jnp.array(h),
+                           CELL.tx_power_w, CELL.bandwidth_hz,
+                           CELL.noise_w_per_hz, CELL.model_size_nats))
+    e2 = float(tx_energy_j(jnp.array(1.0), jnp.array(min(w * 1.5, 1.0)),
+                           jnp.array(h), CELL.tx_power_w, CELL.bandwidth_hz,
+                           CELL.noise_w_per_hz, CELL.model_size_nats))
+    assert e2 <= e1 + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_zero_mask_keeps_global_fixed(K, seed):
+    params = {"w": jax.random.normal(jax.random.PRNGKey(seed), (5, 3))}
+    st_ = init_fl_state(params, K)
+    moved = jax.tree_util.tree_map(lambda x: x + 1.0, st_.client_params)
+    st_ = st_._replace(client_params=moved)
+    d = pseudo_gradients(st_)
+    out = masked_aggregate(st_.global_params, d, jnp.zeros((K,)), K)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(params["w"]))

@@ -1,0 +1,93 @@
+"""Roofline analysis unit tests: term math, probe reconstruction, MoE active
+params, and consistency against the shipped artifacts when present."""
+import glob
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.roofline import active_param_count, analyze, model_flops  # noqa: E402
+from repro import configs  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+
+
+def fake_record(flops=1e12, bytes_=1e11, coll=1e9, arch="llama3.2-1b",
+                shape="train_4k"):
+    return {
+        "status": "ok", "arch": arch, "shape": shape, "mesh": "16x16",
+        "mode": "replica", "devices": 256,
+        "memory_analysis": {"argument_size_in_bytes": 1, "temp_size_in_bytes": 1},
+        "cost_probe": {
+            "total": {"flops": flops, "bytes": bytes_,
+                      "collective_bytes": coll},
+            "m1": {"collectives": {"total_bytes": coll / 2}},
+        },
+    }
+
+
+def test_terms_formulae():
+    r = analyze(fake_record())
+    assert abs(r["t_compute_s"] - 1e12 / PEAK_FLOPS_BF16) < 1e-12
+    assert abs(r["t_memory_s"] - 1e11 / HBM_BW) < 1e-12
+    assert abs(r["t_collective_s"] - 1e9 / ICI_BW) < 1e-12
+    assert r["dominant"] in ("compute", "memory", "collective")
+
+
+def test_negative_collective_clamped_to_m1():
+    r = analyze(fake_record(coll=-5.0))
+    assert r["coll_bytes_per_dev"] == -2.5  # m1 floor (coll/2)
+
+
+def test_dominant_selection():
+    r = analyze(fake_record(flops=1e18, bytes_=1, coll=1))
+    assert r["dominant"] == "compute"
+    r = analyze(fake_record(flops=1, bytes_=1e15, coll=1))
+    assert r["dominant"] == "memory"
+
+
+def test_model_flops_kinds():
+    cfg = configs.get("llama3.2-1b")
+    t = model_flops(cfg, SHAPES["train_4k"])
+    p = model_flops(cfg, SHAPES["prefill_32k"])
+    d = model_flops(cfg, SHAPES["decode_32k"])
+    assert t > p > d
+    # decode = 2·N·B exactly
+    n = active_param_count(cfg)
+    assert abs(d - 2.0 * n * 128) / d < 1e-9
+
+
+def test_probe_reconstruction_identity():
+    """M(R) = M1 + (R−1)(M2−M1) is exact for any linear-in-R metric."""
+    import random
+    random.seed(0)
+    for _ in range(20):
+        per_sb = random.uniform(1, 100)
+        fixed = random.uniform(1, 100)
+        R = random.randint(1, 72)
+        m1 = fixed + per_sb
+        m2 = fixed + 2 * per_sb
+        assert abs((m1 + (R - 1) * (m2 - m1)) - (fixed + R * per_sb)) < 1e-9
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(REPO, "artifacts/dryrun",
+                                               "*_16x16.json")),
+                    reason="no dry-run artifacts in tree")
+def test_artifacts_complete_and_ok():
+    """The shipped baseline artifacts cover all 40 pairs, all OK."""
+    recs = [json.load(open(p)) for p in
+            glob.glob(os.path.join(REPO, "artifacts/dryrun", "*_16x16.json"))]
+    pairs = {(r["arch"], r["shape"]) for r in recs}
+    assert len(pairs) == 40
+    assert all(r["status"] == "ok" for r in recs)
+    mp = [json.load(open(p)) for p in
+          glob.glob(os.path.join(REPO, "artifacts/dryrun", "*_2x16x16.json"))]
+    assert len(mp) == 40 and all(r["status"] == "ok" for r in mp)
+    # every record that has probes reconstructs positive flops
+    for r in recs:
+        if "cost_probe" in r:
+            assert r["cost_probe"]["total"]["flops"] > 0
