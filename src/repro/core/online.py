@@ -7,6 +7,10 @@ with the closed-form probability (46)
     p_k* = clip( (2ρ / (K α_k P_k S T (1−ρ)))^{1/3}, λ, 1 ),
 
 updating (α, β) by the same damped-Newton rule until the residuals vanish.
+
+``rho`` may be passed as a traced array (overriding ``spec.rho``) so the whole
+solve can sit under ``vmap`` over the tradeoff coefficient — the scenario-matrix
+engine sweeps ρ × seed in one device program.
 """
 from __future__ import annotations
 
@@ -28,28 +32,34 @@ class OnlineResult(NamedTuple):
     iters: jax.Array
 
 
-def objective_p1_prime(p, w, h, spec: ProblemSpec):
+def objective_p1_prime(p, w, h, spec: ProblemSpec, rho=None):
     """Eq. (41)."""
     c = spec.cell
+    rho = spec.rho if rho is None else rho
     R = rate_nats(w, h, c.tx_power_w, c.bandwidth_hz, c.noise_w_per_hz)
-    conv = spec.rho / spec.K * jnp.sum(p**-2)
-    energy = (1 - spec.rho) * spec.T * jnp.sum(
+    conv = rho / spec.K * jnp.sum(p**-2)
+    energy = (1 - rho) * spec.T * jnp.sum(
         p * c.tx_power_w * c.model_size_nats / jnp.maximum(R, 1e-30))
     return conv + energy
 
 
 @partial(jax.jit, static_argnames=("spec", "max_outer", "tol"))
 def solve_online(h: jax.Array, spec: ProblemSpec, max_outer: int = 200,
-                 tol: float = 1e-10) -> OnlineResult:
-    """Solve (P1') for a single round's channel gains h: [K]."""
+                 tol: float = 1e-10, rho=None) -> OnlineResult:
+    """Solve (P1') for a single round's channel gains h: [K].
+
+    ``rho=None`` uses the static ``spec.rho``; a traced scalar makes every
+    downstream quantity a function of ρ (vmap-able sweep axis).
+    """
     c = spec.cell
     K, T = spec.K, spec.T
-    PkST1r = c.tx_power_w * c.model_size_nats * T * (1.0 - spec.rho)
+    rho = spec.rho if rho is None else rho
+    PkST1r = c.tx_power_w * c.model_size_nats * T * (1.0 - rho)
     zeta, eps = 0.1, 0.01  # damping: see algorithm1.solve
 
     w = jnp.full((K,), 1.0 / K, dtype=h.dtype)
     R = rate_nats(w, h, c.tx_power_w, c.bandwidth_hz, c.noise_w_per_hz)
-    p = jnp.clip((2 * spec.rho / (K * (1.0 / R) * PkST1r)) ** (1 / 3),
+    p = jnp.clip((2 * rho / (K * (1.0 / R) * PkST1r)) ** (1 / 3),
                  spec.lam, 1.0)
     alpha, beta = 1.0 / R, p * PkST1r / R
 
@@ -61,7 +71,7 @@ def solve_online(h: jax.Array, spec: ProblemSpec, max_outer: int = 200,
     def outer(carry):
         alpha, beta, p, w, it, _ = carry
         # (46): closed-form probability given α
-        p = jnp.clip((2 * spec.rho / (K * alpha * PkST1r)) ** (1 / 3),
+        p = jnp.clip((2 * rho / (K * alpha * PkST1r)) ** (1 / 3),
                      spec.lam, 1.0)
         # (31)/(33): bandwidth given α·β
         w = solve_p4(alpha * beta, h, c)
@@ -94,5 +104,6 @@ def solve_online(h: jax.Array, spec: ProblemSpec, max_outer: int = 200,
 
     init = (alpha, beta, p, w, jnp.int32(0), jnp.asarray(jnp.inf, h.dtype))
     alpha, beta, p, w, it, res = jax.lax.while_loop(cond, outer, init)
-    return OnlineResult(p=p, w=w, objective=objective_p1_prime(p, w, h, spec),
+    return OnlineResult(p=p, w=w,
+                        objective=objective_p1_prime(p, w, h, spec, rho=rho),
                         residual=res, iters=it)

@@ -1,25 +1,36 @@
 """Client-selection policies: the paper's proposed scheme and its three
 benchmarks (§V-A): Random, Greedy (top-k channel gain), Age-based (round-robin).
 
-A policy maps the current round's channel state to (participation, bandwidth):
+Two layers live here:
 
-  * probabilistic policies return per-client transmit probabilities ``p`` and
-    an allocation ``w`` computed *before* the clients' autonomous decisions
-    (paper protocol Steps 2-4);
-  * deterministic benchmarks return a one-hot mask as the probability vector.
+1. **Pure jittable policy functions** — the scan engine's native interface.
+   A ``PolicyFn`` maps ``(t, h_t, sim_state) -> (probs, w)`` where ``t`` is the
+   (possibly traced) round index, ``h_t`` the round's channel gains ``[K]`` and
+   ``sim_state`` the engine's :class:`~repro.fl.state.FLState` (or ``None``
+   when called outside a simulation, e.g. by :func:`average_participants`).
+   Every builder below returns a branch-free array program, so the whole round
+   loop can live inside one ``lax.scan`` and be ``vmap``-ed over scenarios.
+
+2. **Legacy ``Policy`` objects** — thin shims kept for existing callers
+   (examples, figure scripts, tests).  Each dataclass wraps the corresponding
+   pure function as ``.policy_fn`` and keeps the old ``decide`` method.
 
 ``realize`` draws the Bernoulli participation for any policy.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Protocol
+from typing import Any, Callable, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .algorithm1 import ProblemSpec, solve as solve_offline
 from .online import solve_online
+
+#: (t, h_t, sim_state) -> (probs [K], w [K]) — pure, jittable, branch-free.
+PolicyFn = Callable[[jax.Array, jax.Array, Optional[Any]],
+                    Tuple[jax.Array, jax.Array]]
 
 
 @dataclasses.dataclass
@@ -41,22 +52,139 @@ def realize(key: jax.Array, decision: RoundDecision) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# pure policy functions (engine-native)
+# ---------------------------------------------------------------------------
+
+
+def _state_free(fn: PolicyFn) -> PolicyFn:
+    """Tag a policy as independent of the simulation state.
+
+    The scan engine hoists tagged policies out of the sequential round loop:
+    all T rounds are solved at once with one ``vmap`` over ``t`` (still inside
+    the same device program), which turns e.g. T serial (P1') solves into one
+    batched solve.  State-dependent policies (anything reading ``sim_state``)
+    must not be tagged and stay inside the scan body.
+    """
+    fn.state_free = True
+    return fn
+
+
+def random_policy(p_bar: float, num_clients: int) -> PolicyFn:
+    """Uniform probability p̄, equal reserved bandwidth (paper benchmark 1)."""
+
+    def fn(t, h_t, state=None):
+        del t, state
+        K = num_clients
+        probs = jnp.full((K,), p_bar, h_t.dtype)
+        w = jnp.full((K,), 1.0 / K, h_t.dtype)
+        return probs, w
+
+    return _state_free(fn)
+
+
+def greedy_policy(k: int, num_clients: int) -> PolicyFn:
+    """Top-k clients by instantaneous gain [36], [38]; equal split."""
+
+    def fn(t, h_t, state=None):
+        del t, state
+        K = num_clients
+        idx = jnp.argsort(-h_t)[:k]
+        probs = jnp.zeros((K,), h_t.dtype).at[idx].set(1.0)
+        w = jnp.zeros((K,), h_t.dtype).at[idx].set(1.0 / k)
+        return probs, w
+
+    return _state_free(fn)
+
+
+def age_policy(k: int, num_clients: int) -> PolicyFn:
+    """Round-robin k clients per round [33] (Lemma 3's equal-Δ′ optimum)."""
+
+    def fn(t, h_t, state=None):
+        del state
+        K = num_clients
+        start = (t * k) % K
+        idx = (start + jnp.arange(k)) % K
+        probs = jnp.zeros((K,), h_t.dtype).at[idx].set(1.0)
+        w = jnp.zeros((K,), h_t.dtype).at[idx].set(1.0 / k)
+        return probs, w
+
+    return _state_free(fn)
+
+
+def online_policy(spec: ProblemSpec, rho=None) -> PolicyFn:
+    """Paper's scheme, online variant (§IV-D): solve (P1') each round.
+
+    ``rho`` may be a traced scalar (vmap sweep axis); ``None`` uses the static
+    ``spec.rho``.
+    """
+
+    def fn(t, h_t, state=None):
+        del t, state
+        res = solve_online(h_t, spec, rho=rho)
+        return res.p, res.w
+
+    return _state_free(fn)
+
+
+def offline_policy(spec: ProblemSpec, h_all: jax.Array) -> PolicyFn:
+    """Paper's scheme, offline Algorithm 1 pre-solved on the full horizon."""
+    res = solve_offline(h_all, spec)
+    p_all, w_all = res.p, res.w
+
+    def fn(t, h_t, state=None):
+        del h_t, state
+        return jnp.take(p_all, t, axis=1), jnp.take(w_all, t, axis=1)
+
+    return _state_free(fn)
+
+
+def as_policy_fn(policy) -> PolicyFn:
+    """Coerce anything policy-shaped into a ``PolicyFn``.
+
+    Accepts (in order): a pure ``PolicyFn``, an object exposing ``.policy_fn``
+    (the shims below), or any object with a jax-traceable
+    ``decide(t, h_t) -> RoundDecision`` (duck-typed legacy policies).
+    """
+    if hasattr(policy, "policy_fn"):
+        return policy.policy_fn
+    if hasattr(policy, "decide"):
+        def fn(t, h_t, state=None):
+            del state
+            dec = policy.decide(t, h_t)
+            return dec.probs, dec.w
+
+        return fn
+    if callable(policy):
+        return policy
+    raise TypeError(f"not a policy: {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# legacy Policy shims (existing callers: examples, fig scripts, tests)
+# ---------------------------------------------------------------------------
+
+
+class _FnPolicy:
+    """Mixin: ``decide`` delegates to the wrapped pure ``policy_fn``."""
+
+    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
+        probs, w = self.policy_fn(t, h_t, None)
+        return RoundDecision(probs=probs, w=w)
 
 
 @dataclasses.dataclass
-class ProposedOnline:
+class ProposedOnline(_FnPolicy):
     """Paper's scheme, online variant (§IV-D): solve (P1') each round."""
 
     spec: ProblemSpec
     name: str = "proposed"
 
-    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
-        res = solve_online(h_t, self.spec)
-        return RoundDecision(probs=res.p, w=res.w)
+    def __post_init__(self):
+        self.policy_fn = online_policy(self.spec)
 
 
 @dataclasses.dataclass
-class ProposedOffline:
+class ProposedOffline(_FnPolicy):
     """Paper's scheme, offline Algorithm 1 on the full horizon of gains."""
 
     spec: ProblemSpec
@@ -64,15 +192,11 @@ class ProposedOffline:
     name: str = "proposed-offline"
 
     def __post_init__(self):
-        res = solve_offline(self.h_all, self.spec)
-        self._p, self._w = res.p, res.w
-
-    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
-        return RoundDecision(probs=self._p[:, t], w=self._w[:, t])
+        self.policy_fn = offline_policy(self.spec, self.h_all)
 
 
 @dataclasses.dataclass
-class RandomScheme:
+class RandomScheme(_FnPolicy):
     """All clients transmit with the same probability p̄ (paper benchmark 1).
 
     Because participation is autonomous, the server must reserve a feasible
@@ -83,31 +207,24 @@ class RandomScheme:
     num_clients: int
     name: str = "random"
 
-    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
-        K = self.num_clients
-        probs = jnp.full((K,), self.p_bar)
-        w = jnp.full((K,), 1.0 / K)
-        return RoundDecision(probs=probs, w=w)
+    def __post_init__(self):
+        self.policy_fn = random_policy(self.p_bar, self.num_clients)
 
 
 @dataclasses.dataclass
-class GreedyScheme:
+class GreedyScheme(_FnPolicy):
     """Top-k clients by instantaneous channel gain [36], [38]; equal split."""
 
     k: int
     num_clients: int
     name: str = "greedy"
 
-    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
-        K = self.num_clients
-        idx = jnp.argsort(-h_t)[: self.k]
-        probs = jnp.zeros((K,)).at[idx].set(1.0)
-        w = jnp.zeros((K,)).at[idx].set(1.0 / self.k)
-        return RoundDecision(probs=probs, w=w)
+    def __post_init__(self):
+        self.policy_fn = greedy_policy(self.k, self.num_clients)
 
 
 @dataclasses.dataclass
-class AgeBasedScheme:
+class AgeBasedScheme(_FnPolicy):
     """Round-robin k clients per round [33] — the optimum of Lemma 3's
     equal-Δ′ fairness argument."""
 
@@ -115,20 +232,18 @@ class AgeBasedScheme:
     num_clients: int
     name: str = "age"
 
-    def decide(self, t: int, h_t: jax.Array) -> RoundDecision:
-        K = self.num_clients
-        start = (t * self.k) % K
-        idx = (start + jnp.arange(self.k)) % K
-        probs = jnp.zeros((K,)).at[idx].set(1.0)
-        w = jnp.zeros((K,)).at[idx].set(1.0 / self.k)
-        return RoundDecision(probs=probs, w=w)
+    def __post_init__(self):
+        self.policy_fn = age_policy(self.k, self.num_clients)
 
 
-def average_participants(policy: Policy, h_all: jax.Array) -> float:
+def average_participants(policy, h_all: jax.Array) -> float:
     """Expected number of transmitting clients per round under a policy —
-    used to match k across schemes for fair comparison (paper §V-A)."""
+    used to match k across schemes for fair comparison (paper §V-A).
+
+    One vmapped device program over the horizon (no Python round loop).
+    """
+    fn = as_policy_fn(policy)
     T = h_all.shape[1]
-    tot = 0.0
-    for t in range(T):
-        tot += float(jnp.sum(policy.decide(t, h_all[:, t]).probs))
-    return tot / T
+    ts = jnp.arange(T, dtype=jnp.int32)
+    probs = jax.vmap(lambda t, h_t: fn(t, h_t, None)[0])(ts, h_all.T)
+    return float(jnp.sum(probs) / T)

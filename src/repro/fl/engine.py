@@ -1,0 +1,486 @@
+"""On-device scan-based FL simulation engine.
+
+The paper's per-round protocol (§II, Fig. 1) — policy, autonomous Bernoulli
+participation, Δ_k forced transmission, bandwidth reservation, energy ledger
+(eq. 5), local SGD, masked aggregation (eq. 3), broadcast — is expressed as a
+single jittable round transition and executed for all ``T`` rounds inside one
+``lax.scan``.  Nothing syncs to the host per round; the only readback is the
+stacked per-round trace at the end (masks, energies, strided evals).
+
+Layout:
+
+* **policy interface** — a pure ``PolicyFn`` ``(t, h_t, sim_state) ->
+  (probs, w)`` (see :mod:`repro.core.selection`); legacy ``Policy`` objects
+  are coerced via ``as_policy_fn``.
+* **scan carry** — ``(FLState, energy [K] f32)``: global model, stacked client
+  models/anchors, round counter, per-client last-transmission round, and the
+  cumulative per-client energy ledger, all device arrays.
+* **per-round PRNG** — ``jax.random.fold_in(base_key, t)``: the stream only
+  depends on ``(seed, t)``, so the host loop and the scan engine draw
+  bit-identical participation masks (the parity tests rely on this).
+* **evals** — computed inside the scan at ``eval_every`` strides via
+  ``lax.cond`` (off-stride rounds skip the forward pass when not vmapped).
+* **scenario fan-out** — ``run_scenario_matrix`` vmaps the whole simulation
+  over ρ (the tradeoff coefficient of (P1'), traced through ``solve_online``)
+  × scenario lanes (channel realizations + PRNG seeds) in one device program;
+  ``run_seed_matrix`` does the lane axis for arbitrary policies.
+
+See ``docs/engine.md`` for the full architecture notes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.channel import CellConfig, rate_nats
+from ..core.selection import PolicyFn, as_policy_fn, online_policy
+from ..data.pipeline import BatchIterator, client_batches
+from ..data.synthetic import Dataset
+from ..optim import Optimizer, sgd
+from .state import (FLState, broadcast_to_participants, init_fl_state,
+                    masked_aggregate, pseudo_gradients)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    rounds: int = 50
+    local_iters: int = 5          # paper: 5 for MNIST, 1 for CIFAR
+    batch_size: int = 10          # paper: 10 for MNIST, 128 for CIFAR
+    lr: float = 0.01              # paper: 0.01
+    eval_every: int = 5
+    seed: int = 0
+    max_staleness: int | None = None   # Δ_k enforcement (None = pure Bernoulli)
+    aging_boost: bool = False          # beyond-paper: soft aging — raise p as
+                                       # staleness → Δ_k so clients transmit at
+                                       # the first decent fade *before* the
+                                       # deadline forces a deep-fade upload
+    eval_batch: int = 2048
+
+
+class SimResult(NamedTuple):
+    test_acc: np.ndarray        # [n_evals]
+    test_loss: np.ndarray       # [n_evals]
+    eval_rounds: np.ndarray     # [n_evals]
+    energy_per_client: np.ndarray  # [K] cumulative Joules
+    energy_timeline: np.ndarray    # [rounds] cumulative total energy
+    participation: np.ndarray      # [rounds, K] realized masks
+    state: FLState
+
+
+class RoundTrace(NamedTuple):
+    """Per-round scan outputs (leading axis T after the scan)."""
+
+    mask: jax.Array      # [K] realized participation
+    e_round: jax.Array   # [K] Joules spent this round
+    acc: jax.Array       # scalar (0 when did_eval is False)
+    loss: jax.Array      # scalar (0 when did_eval is False)
+    did_eval: jax.Array  # bool scalar
+
+
+# ---------------------------------------------------------------------------
+# shared per-round pieces (scan engine AND legacy host loop use these, so the
+# two execution modes agree bit-wise on identical PRNG streams)
+# ---------------------------------------------------------------------------
+
+
+def grant_forced_bandwidth(w: jax.Array, forced: jax.Array,
+                           num_clients: int) -> jax.Array:
+    """Staleness-aware bandwidth reservation (beyond-paper), corrected.
+
+    A client transmitting only because its Δ_k bound expired would otherwise
+    use its (possibly zero) probabilistic slice — grant it an equal 1/K
+    share.  When Σw ≤ 1 still holds after granting, non-forced clients keep
+    their server-optimal allocation untouched (the old implementation
+    renormalized everyone, shrinking optimal slices too).  Only when the
+    grant overflows the band do non-forced clients shrink, proportionally,
+    into the remaining room — the forced grant is never scaled to zero
+    (policies like greedy/age allocate w = 0 to unselected clients, so
+    "rescale the granted shares into the leftover slack" would strand a
+    forced client at w = 0 and blow up its eq.-5 energy).  Branch-free:
+    with no forced client this is the identity.
+    """
+    forced_f = forced.astype(w.dtype)
+    granted = jnp.where(forced, jnp.maximum(w, 1.0 / num_clients), w)
+    g = jnp.sum(granted * forced_f)            # requested forced mass
+    b = jnp.sum(w * (1.0 - forced_f))          # non-forced (optimal) mass
+    # forced keep their grant, capped at the full band
+    g_scale = jnp.where(g > 1.0, 1.0 / jnp.maximum(g, 1e-30), 1.0)
+    room = 1.0 - jnp.minimum(g, 1.0)
+    # non-forced shrink only when the grant leaves too little room
+    nf_scale = jnp.where(b > room, room / jnp.maximum(b, 1e-30), 1.0)
+    return jnp.where(forced, granted * g_scale, w * nf_scale)
+
+
+def apply_round_decision(probs: jax.Array, w: jax.Array, t: jax.Array,
+                         h_t: jax.Array, state: FLState, base_key: jax.Array,
+                         cfg: SimConfig, cell: CellConfig, num_clients: int):
+    """Protocol Steps 3-4 + energy ledger given the round's (probs, w).
+
+    Returns ``(mask, forced, w, e_round)``; the PRNG stream is
+    ``fold_in(base_key, t)`` so it only depends on ``(seed, t)``.
+    """
+    K = num_clients
+    probs = probs.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    staleness = (state.round - state.last_tx).astype(jnp.float32)
+    if cfg.aging_boost and cfg.max_staleness is not None:
+        boost = jnp.clip(staleness / cfg.max_staleness, 0.0, 1.0) ** 2
+        probs = 1.0 - (1.0 - probs) * (1.0 - boost)
+    u = jax.random.uniform(jax.random.fold_in(base_key, t), (K,))
+    mask = (u < probs).astype(jnp.float32)
+    forced = jnp.zeros((K,), bool)
+    if cfg.max_staleness is not None:
+        stale = (state.round - state.last_tx) >= cfg.max_staleness
+        forced = stale & (mask == 0.0)
+        mask = jnp.maximum(mask, stale.astype(jnp.float32))
+        w = grant_forced_bandwidth(w, forced, K)
+    R = rate_nats(w, h_t, cell.tx_power_w, cell.bandwidth_hz,
+                  cell.noise_w_per_hz)
+    e_round = mask * cell.tx_power_w * cell.model_size_nats \
+        / jnp.maximum(R, 1e-30)
+    e_round = jnp.where(mask > 0.0, e_round, 0.0)
+    return mask, forced, w, e_round
+
+
+def round_decision(policy_fn: PolicyFn, t: jax.Array, h_t: jax.Array,
+                   state: FLState, base_key: jax.Array, cfg: SimConfig,
+                   cell: CellConfig, num_clients: int):
+    """Protocol Steps 2-4 for one round: policy then
+    :func:`apply_round_decision` (the legacy host loop's per-round path)."""
+    probs, w = policy_fn(t, h_t, state)
+    return apply_round_decision(probs, w, t, h_t, state, base_key, cfg, cell,
+                                num_clients)
+
+
+def make_local_train(loss_fn: Callable, opt: Optimizer):
+    """vmapped-over-clients local SGD: ``(params, xb, yb) -> params`` with
+    ``xb: [K, local_iters, B, ...]``."""
+
+    def local_train(params, xb, yb):
+        opt_state = opt.init(params)
+
+        def one(carry, batch):
+            params, opt_state = carry
+            x, y = batch
+            g = jax.grad(loss_fn)(params, x, y)
+            upd, opt_state = opt.update(g, opt_state, params)
+            params = jax.tree_util.tree_map(lambda p, u: p + u, params, upd)
+            return (params, opt_state), None
+
+        (params, _), _ = jax.lax.scan(one, (params, opt_state), (xb, yb))
+        return params
+
+    return jax.vmap(local_train)
+
+
+def empty_client_batches(client_data: Sequence[Dataset], cfg: SimConfig):
+    """``[K, 0, B, ...]`` placeholder pair for protocol-only runs
+    (``local_iters=0``): the training scan is a no-op, clients never move."""
+    K = len(client_data)
+    sample = client_data[0].x.shape[1:]
+    b = min(cfg.batch_size, min(len(c.y) for c in client_data))
+    return (jnp.zeros((K, 0, b) + tuple(sample)),
+            jnp.zeros((K, 0, b), jnp.int32))
+
+
+def stack_round_batches(client_data: Sequence[Dataset], cfg: SimConfig):
+    """Pre-draw every round's batches with the legacy iterator streams.
+
+    Returns ``(xb_all, yb_all)`` shaped ``[T, K, local_iters, B, ...]`` —
+    consumption order (round-major, local-iter-minor, per-client seeded
+    ``cfg.seed + 17k``) matches the host loop exactly, so both engines train
+    on identical data.  MNIST-scale footprint: T·K·L·B·784 fp32 ≈ 125 MB at
+    (T=50, K=16, L=5, B=10); for larger worlds switch to on-device sampling.
+    """
+    K = len(client_data)
+    if cfg.local_iters == 0:
+        xb, yb = empty_client_batches(client_data, cfg)
+        return (jnp.zeros((cfg.rounds,) + xb.shape, xb.dtype),
+                jnp.zeros((cfg.rounds,) + yb.shape, yb.dtype))
+    iters = [BatchIterator(ds, cfg.batch_size, seed=cfg.seed + 17 * k)
+             for k, ds in enumerate(client_data)]
+    xs, ys = [], []
+    for _ in range(cfg.rounds):
+        xt, yt = [], []
+        for _ in range(cfg.local_iters):
+            xb, yb = client_batches(iters)
+            xt.append(xb)
+            yt.append(yb)
+        xs.append(jnp.stack(xt, axis=1))   # [K, L, B, ...]
+        ys.append(jnp.stack(yt, axis=1))
+    return jnp.stack(xs), jnp.stack(ys)    # [T, K, L, B, ...]
+
+
+# ---------------------------------------------------------------------------
+# the scan engine
+# ---------------------------------------------------------------------------
+
+
+def _client_mesh(num_clients: int):
+    """1-D ``("k",)`` mesh over the largest divisor-of-K device prefix, or
+    ``None`` when only one device is visible (sharding becomes a no-op)."""
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return None
+    d = max(i for i in range(1, min(len(devs), num_clients) + 1)
+            if num_clients % i == 0)
+    if d <= 1:
+        return None
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:d]), ("k",))
+
+
+def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
+                   cfg: SimConfig, cell: CellConfig, num_clients: int,
+                   policy_fn: PolicyFn, shard_clients: bool | None = None):
+    """Build the pure simulation function (one ``lax.scan`` over all rounds).
+
+    The returned ``simulate(params, xb_all, yb_all, h_rounds, base_key,
+    test_x, test_y) -> (FLState, energy [K], RoundTrace[T])`` is traceable
+    end-to-end: jit it for a single run, vmap it over ``(base_key, h_rounds)``
+    (and a traced ρ via the policy closure) for scenario fan-out.
+    ``h_rounds`` is round-major ``[T, K]``.
+
+    Policies tagged ``state_free`` (all five paper schemes) are hoisted out
+    of the sequential scan: every round's ``(probs, w)`` is computed in one
+    ``vmap`` over ``t`` before the scan — T serial (P1') solves become one
+    batched solve, still inside the same device program.  Untagged policies
+    (anything reading the carried ``FLState``) run inside the scan body.
+
+    ``shard_clients`` (default auto): when multiple devices are visible and
+    divide K, the client axis — the data-parallel mesh axis of the FL state —
+    is sharded via ``shard_map`` for the local-training leg, and GSPMD
+    propagates the sharding through the aggregation/broadcast tree ops.
+    Auto-disabled on a single device; pass ``False`` to force off (the vmap
+    matrix runners do, sharding does not compose with their lane axis).
+    """
+    K = num_clients
+    vtrain = make_local_train(loss_fn, opt)
+    hoist = getattr(policy_fn, "state_free", False)
+    mesh = _client_mesh(K) if shard_clients in (None, True) else None
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        vtrain = shard_map(vtrain, mesh,
+                           in_specs=(P("k"), P("k"), P("k")),
+                           out_specs=P("k"))
+
+    def hoisted_policy(h_rounds):
+        ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
+        return jax.vmap(lambda t, h: policy_fn(t, h, None))(ts, h_rounds)
+
+    def simulate(params, xb_all, yb_all, h_rounds, base_key, test_x, test_y,
+                 pw_all=None):
+        ts_all = jnp.arange(cfg.rounds, dtype=jnp.int32)
+        if hoist and pw_all is None:
+            pw_all = hoisted_policy(h_rounds)
+        elif not hoist:
+            # dummy per-round operands; the policy runs in the scan body
+            pw_all = (jnp.zeros((cfg.rounds, 0)),) * 2
+
+        def eval_now(p):
+            return (jnp.asarray(acc_fn(p, test_x, test_y), jnp.float32),
+                    jnp.asarray(loss_fn(p, test_x, test_y), jnp.float32))
+
+        def skip_eval(p):
+            del p
+            return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+
+        def step(carry, xs):
+            state, energy = carry
+            t, h_t, xb, yb, pw = xs
+            # --- Steps 2-4: policy, Bernoulli draws, Δ_k, energy (eq. 5) ---
+            probs, w = pw if hoist else policy_fn(t, h_t, state)
+            mask, forced, w, e_round = apply_round_decision(
+                probs, w, t, h_t, state, base_key, cfg, cell, K)
+            energy = energy + e_round
+            # --- Step 1 (continuous local training) + Steps 4-5 ------------
+            client = vtrain(state.client_params, xb, yb)
+            state = state._replace(client_params=client)
+            deltas = pseudo_gradients(state)
+            new_global = masked_aggregate(state.global_params, deltas, mask, K)
+            state = broadcast_to_participants(state, new_global, mask)
+            # --- strided eval (stays on device; read back once at the end) -
+            do_eval = jnp.logical_or(t % cfg.eval_every == 0,
+                                     t == cfg.rounds - 1)
+            acc, loss = jax.lax.cond(do_eval, eval_now, skip_eval,
+                                     state.global_params)
+            return (state, energy), RoundTrace(mask, e_round, acc, loss,
+                                               do_eval)
+
+        state0 = init_fl_state(params, K)
+        energy0 = jnp.zeros((K,), jnp.float32)
+        (state, energy), traces = jax.lax.scan(
+            step, (state0, energy0), (ts_all, h_rounds, xb_all, yb_all,
+                                      pw_all))
+        return state, energy, traces
+
+    # under client-axis sharding the tiny [T, K] policy solve pays SPMD
+    # partitioning overhead inside the main program — callers (make_runner)
+    # run it as its own replicated jit and pass pw_all in
+    simulate.split_policy = hoist and mesh is not None
+    simulate.hoisted_policy = hoisted_policy
+    return simulate
+
+
+def _to_result(state, energy, traces, cfg: SimConfig) -> SimResult:
+    """Single end-of-run host readback → legacy ``SimResult``."""
+    did = np.asarray(traces.did_eval)
+    idx = np.where(did)[0]
+    e_round = np.asarray(traces.e_round)               # [T, K]
+    return SimResult(
+        test_acc=np.asarray(traces.acc)[idx],
+        test_loss=np.asarray(traces.loss)[idx],
+        eval_rounds=idx,
+        energy_per_client=np.asarray(energy),
+        energy_timeline=np.cumsum(e_round.sum(axis=1)),
+        participation=np.asarray(traces.mask),
+        state=state,
+    )
+
+
+def make_runner(loss_fn: Callable, acc_fn: Callable,
+                client_data: Sequence[Dataset], test_ds: Dataset, policy,
+                cell: CellConfig, cfg: SimConfig,
+                opt: Optimizer | None = None,
+                shard_clients: bool | None = None) -> Callable:
+    """Pre-build the compiled scan runner for repeated invocations.
+
+    Returns ``runner(params, h_all, seed=None) -> SimResult``; the jitted
+    scan program and the stacked batch arrays are built once and reused, so
+    successive calls (new channel draws, new PRNG seeds, warm benchmarking)
+    pay zero re-trace/re-stack cost.
+    """
+    K = len(client_data)
+    opt = opt or sgd(cfg.lr)
+    policy_fn = as_policy_fn(policy)
+    xb_all, yb_all = stack_round_batches(client_data, cfg)
+    test_x = test_ds.x[: cfg.eval_batch]
+    test_y = test_ds.y[: cfg.eval_batch]
+    sim = build_scan_sim(loss_fn, acc_fn, opt, cfg, cell, K, policy_fn,
+                         shard_clients=shard_clients)
+    simulate = jax.jit(sim)
+    policy_pre = jax.jit(sim.hoisted_policy) if sim.split_policy else None
+
+    def runner(params, h_all, seed: int | None = None) -> SimResult:
+        key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+        h_rounds = jnp.swapaxes(h_all, 0, 1)
+        pw = policy_pre(h_rounds) if policy_pre is not None else None
+        state, energy, traces = simulate(
+            params, xb_all, yb_all, h_rounds, key, test_x, test_y,
+            pw_all=pw)
+        return _to_result(state, energy, traces, cfg)
+
+    return runner
+
+
+def run_simulation_scan(init_params: Any,
+                        loss_fn: Callable,
+                        acc_fn: Callable,
+                        client_data: Sequence[Dataset],
+                        test_ds: Dataset,
+                        policy,
+                        h_all: jax.Array,           # [K, rounds]
+                        cell: CellConfig,
+                        cfg: SimConfig,
+                        opt: Optimizer | None = None) -> SimResult:
+    """Scan-engine drop-in for the legacy ``run_simulation`` signature."""
+    return make_runner(loss_fn, acc_fn, client_data, test_ds, policy, cell,
+                       cfg, opt)(init_params, h_all)
+
+
+# ---------------------------------------------------------------------------
+# scenario fan-out: vmap the whole simulation over lanes and ρ
+# ---------------------------------------------------------------------------
+
+
+class MatrixResult(NamedTuple):
+    """Stacked traces; leading axes are the vmapped ones ([R, S, ...] for
+    :func:`run_scenario_matrix`, [S, ...] for :func:`run_seed_matrix`)."""
+
+    acc: np.ndarray          # [..., n_evals]
+    loss: np.ndarray         # [..., n_evals]
+    eval_rounds: np.ndarray  # [n_evals]
+    energy: np.ndarray       # [..., K] cumulative per-client Joules
+    e_round: np.ndarray      # [..., T, K]
+    participation: np.ndarray  # [..., T, K]
+
+
+def _matrix_result(energy, traces) -> MatrixResult:
+    did = np.asarray(traces.did_eval)
+    # did_eval depends only on t — identical across lanes; collapse to [T].
+    did_t = did.reshape(-1, did.shape[-1])[0]
+    idx = np.where(did_t)[0]
+    return MatrixResult(
+        acc=np.asarray(traces.acc)[..., idx],
+        loss=np.asarray(traces.loss)[..., idx],
+        eval_rounds=idx,
+        energy=np.asarray(energy),
+        e_round=np.asarray(traces.e_round),
+        participation=np.asarray(traces.mask),
+    )
+
+
+def run_seed_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
+                    policy, h_stack: jax.Array, cell: CellConfig,
+                    cfg: SimConfig, seeds: Sequence[int],
+                    opt: Optimizer | None = None) -> MatrixResult:
+    """vmap the scan engine over scenario lanes for one policy.
+
+    ``h_stack: [S, K, T]`` stacked channel realizations (one per lane —
+    seeds, placements, fading draws); ``seeds`` gives each lane its own
+    participation PRNG stream.  One compiled device program runs every lane.
+    """
+    K = h_stack.shape[1]
+    opt = opt or sgd(cfg.lr)
+    policy_fn = as_policy_fn(policy)
+    xb_all, yb_all = stack_round_batches(client_data, cfg)
+    test_x = test_ds.x[: cfg.eval_batch]
+    test_y = test_ds.y[: cfg.eval_batch]
+    simulate = build_scan_sim(loss_fn, acc_fn, opt, cfg, cell, K, policy_fn,
+                              shard_clients=False)
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    h_rounds = jnp.swapaxes(h_stack, 1, 2)             # [S, T, K]
+    fan = jax.jit(jax.vmap(
+        lambda key, h: simulate(init_params, xb_all, yb_all, h, key,
+                                test_x, test_y)))
+    _, energy, traces = fan(keys, h_rounds)
+    return _matrix_result(energy, traces)
+
+
+def run_scenario_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
+                        spec, h_stack: jax.Array, rhos: Sequence[float],
+                        cfg: SimConfig, seeds: Sequence[int],
+                        opt: Optimizer | None = None) -> MatrixResult:
+    """ρ × lane fan-out of the paper's online scheme in one device program.
+
+    The tradeoff coefficient ρ of (P1') is traced through ``solve_online``
+    (see :func:`repro.core.online.solve_online`), so the full Fig. 6-9-style
+    sweep — ρ on one vmap axis, channel/seed lanes on the other — compiles
+    once and runs entirely on device.  Returns ``MatrixResult`` with leading
+    axes ``[R, S]``.  Sweep K by calling once per client count (shapes
+    change, so K cannot share a vmap axis).
+    """
+    K = h_stack.shape[1]
+    cell = spec.cell
+    opt = opt or sgd(cfg.lr)
+    xb_all, yb_all = stack_round_batches(client_data, cfg)
+    test_x = test_ds.x[: cfg.eval_batch]
+    test_y = test_ds.y[: cfg.eval_batch]
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    h_rounds = jnp.swapaxes(h_stack, 1, 2)             # [S, T, K]
+
+    def one(rho, key, h):
+        simulate = build_scan_sim(loss_fn, acc_fn, opt, cfg, cell, K,
+                                  online_policy(spec, rho=rho),
+                                  shard_clients=False)
+        return simulate(init_params, xb_all, yb_all, h, key, test_x, test_y)
+
+    lanes = jax.vmap(one, in_axes=(None, 0, 0))        # scenario lanes
+    fan = jax.jit(jax.vmap(lanes, in_axes=(0, None, None)))  # ρ axis
+    _, energy, traces = fan(jnp.asarray(rhos, jnp.float32), keys, h_rounds)
+    return _matrix_result(energy, traces)

@@ -10,73 +10,38 @@ Per round t:
      (energy ledger: P_k · S / R_{k,t});
   5. the server applies x ← x + (1/K)Σδ_k and broadcasts x to participants.
 
-The per-round compute is one jitted function over stacked client states.
+``run_simulation`` executes the whole horizon inside one ``lax.scan`` on
+device (see :mod:`repro.fl.engine`); this module is the compatibility layer
+that keeps the original signature.  ``run_simulation_legacy`` is the old
+host-side round loop — same per-round helpers, same ``fold_in`` PRNG streams,
+so the two agree bit-wise — kept for parity tests and the engine benchmark.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.channel import CellConfig, rate_nats
-from ..core.selection import Policy, realize
+from ..core.channel import CellConfig
+from ..core.selection import Policy, as_policy_fn
 from ..data.pipeline import BatchIterator, client_batches
 from ..data.synthetic import Dataset
 from ..optim import Optimizer, sgd
+from .engine import (SimConfig, SimResult, empty_client_batches,
+                     make_local_train, round_decision, run_simulation_scan)
 from .state import (FLState, broadcast_to_participants, init_fl_state,
                     masked_aggregate, pseudo_gradients)
 
-
-@dataclasses.dataclass(frozen=True)
-class SimConfig:
-    rounds: int = 50
-    local_iters: int = 5          # paper: 5 for MNIST, 1 for CIFAR
-    batch_size: int = 10          # paper: 10 for MNIST, 128 for CIFAR
-    lr: float = 0.01              # paper: 0.01
-    eval_every: int = 5
-    seed: int = 0
-    max_staleness: int | None = None   # Δ_k enforcement (None = pure Bernoulli)
-    aging_boost: bool = False          # beyond-paper: soft aging — raise p as
-                                       # staleness → Δ_k so clients transmit at
-                                       # the first decent fade *before* the
-                                       # deadline forces a deep-fade upload
-    eval_batch: int = 2048
-
-
-class SimResult(NamedTuple):
-    test_acc: np.ndarray        # [n_evals]
-    test_loss: np.ndarray       # [n_evals]
-    eval_rounds: np.ndarray     # [n_evals]
-    energy_per_client: np.ndarray  # [K] cumulative Joules
-    energy_timeline: np.ndarray    # [rounds] cumulative total energy
-    participation: np.ndarray      # [rounds, K] realized masks
-    state: FLState
+__all__ = ["SimConfig", "SimResult", "run_simulation",
+           "run_simulation_legacy", "make_round_fn"]
 
 
 def make_round_fn(loss_fn: Callable, opt: Optimizer, local_iters: int,
                   num_clients: int):
     """Build the jitted per-round transition over stacked client states."""
-
-    def local_train(params, xb, yb):
-        # xb: [local_iters, B, ...] for one client
-        opt_state = opt.init(params)
-
-        def one(carry, batch):
-            params, opt_state = carry
-            x, y = batch
-            g = jax.grad(loss_fn)(params, x, y)
-            upd, opt_state = opt.update(g, opt_state, params)
-            params = jax.tree_util.tree_map(lambda p, u: p + u, params, upd)
-            return (params, opt_state), None
-
-        (params, _), _ = jax.lax.scan(one, (params, opt_state), (xb, yb))
-        return params
-
-    vtrain = jax.vmap(local_train)
+    vtrain = make_local_train(loss_fn, opt)
 
     @jax.jit
     def fl_round(state: FLState, mask: jax.Array, xb: jax.Array,
@@ -101,16 +66,44 @@ def run_simulation(init_params: Any,
                    cell: CellConfig,
                    cfg: SimConfig,
                    opt: Optimizer | None = None) -> SimResult:
+    """One jitted ``lax.scan`` over all rounds (no per-round host sync)."""
+    return run_simulation_scan(init_params, loss_fn, acc_fn, client_data,
+                               test_ds, policy, h_all, cell, cfg, opt)
+
+
+def run_simulation_legacy(init_params: Any,
+                          loss_fn: Callable,
+                          acc_fn: Callable,
+                          client_data: list[Dataset],
+                          test_ds: Dataset,
+                          policy: Policy,
+                          h_all: jax.Array,
+                          cell: CellConfig,
+                          cfg: SimConfig,
+                          opt: Optimizer | None = None) -> SimResult:
+    """Host-side round loop (the pre-scan engine).
+
+    Each round syncs mask/energy through numpy and dispatches the jitted
+    round transition separately — kept as the wall-clock baseline for
+    ``benchmarks/bench_engine.py`` and as the reference in the scan-parity
+    tests.  Decision logic and PRNG streams are shared with the scan engine
+    (``engine.round_decision`` with ``fold_in(seed, t)``), so results match
+    the scan engine bit-wise on identical configs.
+    """
     K = len(client_data)
     opt = opt or sgd(cfg.lr)
+    policy_fn = as_policy_fn(policy)
     state = init_fl_state(init_params, K)
     round_fn = make_round_fn(loss_fn, opt, cfg.local_iters, K)
+    base_key = jax.random.PRNGKey(cfg.seed)
+
+    decide = jax.jit(lambda t, h_t, st: round_decision(
+        policy_fn, t, h_t, st, base_key, cfg, cell, K))
 
     iters = [BatchIterator(ds, cfg.batch_size, seed=cfg.seed + 17 * k)
              for k, ds in enumerate(client_data)]
-    key = jax.random.PRNGKey(cfg.seed)
 
-    energy = np.zeros((K,))
+    energy = np.zeros((K,), np.float32)
     energy_tl = np.zeros((cfg.rounds,))
     parts = np.zeros((cfg.rounds, K), np.float32)
     accs, losses, eval_rounds = [], [], []
@@ -120,54 +113,32 @@ def run_simulation(init_params: Any,
     eval_fn = jax.jit(lambda p: (acc_fn(p, test_x, test_y),
                                  loss_fn(p, test_x, test_y)))
 
+    if cfg.local_iters == 0:  # protocol-only runs (benchmarks)
+        empty_x, empty_y = empty_client_batches(client_data, cfg)
+
     for t in range(cfg.rounds):
-        # --- stack local_iters batches per client --------------------------
-        xs, ys = [], []
-        for _ in range(cfg.local_iters):
-            xb, yb = client_batches(iters)
-            xs.append(xb)
-            ys.append(yb)
-        xb = jnp.stack(xs, axis=1)  # [K, local_iters, B, ...]
-        yb = jnp.stack(ys, axis=1)
+        # --- stack local_iters batches per client; the per-round host
+        # stacking is the legacy loop's measured cost, but consumption order
+        # and iterator seeds must stay identical to stack_round_batches or
+        # the scan-parity tests break ------------------------------------
+        if cfg.local_iters == 0:
+            xb, yb = empty_x, empty_y
+        else:
+            xs, ys = [], []
+            for _ in range(cfg.local_iters):
+                xb, yb = client_batches(iters)
+                xs.append(xb)
+                ys.append(yb)
+            xb = jnp.stack(xs, axis=1)  # [K, local_iters, B, ...]
+            yb = jnp.stack(ys, axis=1)
 
-        # --- server policy + autonomous client decisions --------------------
-        h_t = h_all[:, t]
-        dec = policy.decide(t, h_t)
-        if cfg.aging_boost and cfg.max_staleness is not None:
-            staleness = (int(state.round) - np.asarray(state.last_tx))
-            boost = np.clip(staleness / cfg.max_staleness, 0.0, 1.0) ** 2
-            probs = 1.0 - (1.0 - np.asarray(dec.probs)) * (1.0 - boost)
-            dec = type(dec)(probs=jnp.asarray(probs, jnp.float32), w=dec.w)
-        key, sub = jax.random.split(key)
-        mask = realize(sub, dec)
-        forced = np.zeros((K,), bool)
-        if cfg.max_staleness is not None:
-            stale = (int(state.round) - np.asarray(state.last_tx)
-                     >= cfg.max_staleness)
-            forced = stale & (np.asarray(mask) == 0)
-            mask = jnp.maximum(mask, jnp.asarray(stale, jnp.float32))
-
-        # --- energy ledger (realized transmissions, eq. 5) ------------------
-        m = np.asarray(mask)
-        w = np.asarray(dec.w)
-        if forced.any():
-            # staleness-aware bandwidth reservation (beyond-paper): a client
-            # transmitting only because its Δ_k bound expired would otherwise
-            # use its (near-floor) probabilistic slice — grant it an equal
-            # 1/K share and rescale so Σw ≤ 1
-            w = np.where(forced, np.maximum(w, 1.0 / K), w)
-            tot = w[m > 0].sum() + w[m == 0].sum() * 0.0
-            if w.sum() > 1.0:
-                w = w / w.sum()
-        R = np.asarray(rate_nats(jnp.asarray(w), h_t, cell.tx_power_w,
-                                 cell.bandwidth_hz, cell.noise_w_per_hz))
-        e_round = m * cell.tx_power_w * cell.model_size_nats / np.maximum(R, 1e-30)
-        e_round = np.where(m > 0, e_round, 0.0)
-        energy += e_round
+        # --- policy + autonomous decisions + energy ledger (eq. 5) ---------
+        mask, forced, w, e_round = decide(jnp.int32(t), h_all[:, t], state)
+        energy += np.asarray(e_round)
         energy_tl[t] = energy.sum()
-        parts[t] = m
+        parts[t] = np.asarray(mask)
 
-        # --- one protocol round ---------------------------------------------
+        # --- one protocol round --------------------------------------------
         state = round_fn(state, mask, xb, yb)
 
         if t % cfg.eval_every == 0 or t == cfg.rounds - 1:

@@ -45,13 +45,17 @@ def pseudo_gradients(state: FLState) -> Any:
 
 
 def masked_aggregate(global_params: Any, deltas: Any, mask: jax.Array,
-                     num_clients: int, use_pallas: bool = False) -> Any:
+                     num_clients: int, use_pallas: bool | None = None) -> Any:
     """Eq. (3): x ← x + (1/K) Σ_{k∈C_t} δ_k.
 
-    ``use_pallas=True`` routes every leaf through the fused
-    ``kernels.fl_aggregate`` TPU kernel (one HBM pass per tile; interpret
-    mode on CPU); default is the jnp oracle path.
+    ``use_pallas=None`` auto-selects by backend: on TPU every leaf routes
+    through the fused ``kernels.fl_aggregate`` kernel (the op sits on the hot
+    path of the scan engine, one HBM pass per tile); elsewhere the jnp path is
+    both the oracle and the fastest option.  ``True``/``False`` force a path
+    (``True`` off-TPU runs the kernel in interpret mode — for parity tests).
     """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
     if use_pallas:
         from ..kernels import ops
 

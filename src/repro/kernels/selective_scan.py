@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 DEFAULT_BD = 256
 DEFAULT_SC = 128
 
@@ -36,18 +40,22 @@ def _kernel(xc_ref, dt_ref, bm_ref, cm_ref, a_ref, d_ref, y_ref, h_ref, *,
     Dv = d_ref[...].astype(jnp.float32)[0]             # [BD]
 
     def step(t, h):
-        dt_t = pl.load(dt_ref, (0, pl.ds(t, 1), slice(None)))[0]  # [BD]
-        x_t = pl.load(xc_ref, (0, pl.ds(t, 1), slice(None)))[0]
-        b_t = pl.load(bm_ref, (0, pl.ds(t, 1), slice(None)))[0]   # [N]
-        c_t = pl.load(cm_ref, (0, pl.ds(t, 1), slice(None)))[0]
+        # leading axis sliced with ds(0, 1), not a bare int: the interpret
+        # path's load discharge rule rejects scalar indexer components on
+        # this jax version
+        lead = pl.ds(0, 1)
+        dt_t = pl.load(dt_ref, (lead, pl.ds(t, 1), slice(None)))[0, 0]  # [BD]
+        x_t = pl.load(xc_ref, (lead, pl.ds(t, 1), slice(None)))[0, 0]
+        b_t = pl.load(bm_ref, (lead, pl.ds(t, 1), slice(None)))[0, 0]   # [N]
+        c_t = pl.load(cm_ref, (lead, pl.ds(t, 1), slice(None)))[0, 0]
         dt_f = dt_t.astype(jnp.float32)
         dA = jnp.exp(dt_f[:, None] * A)                # [BD, N]
         h = dA * h + (dt_f * x_t.astype(jnp.float32))[:, None] \
             * b_t.astype(jnp.float32)[None, :]
         y = jnp.sum(h * c_t.astype(jnp.float32)[None, :], axis=1) \
             + Dv * x_t.astype(jnp.float32)
-        pl.store(y_ref, (0, pl.ds(t, 1), slice(None)),
-                 y.astype(y_ref.dtype)[None, :])
+        pl.store(y_ref, (pl.ds(0, 1), pl.ds(t, 1), slice(None)),
+                 y.astype(y_ref.dtype)[None, None, :])
         return h
 
     h = jax.lax.fori_loop(0, sc, step, h_ref[...])
@@ -84,7 +92,7 @@ def selective_scan(xc: jax.Array, dt: jax.Array, Bm: jax.Array,
         out_specs=pl.BlockSpec((1, sc, bd), lambda b, c, s: (b, s, c)),
         out_shape=jax.ShapeDtypeStruct((B, S, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xc, dt, Bm, Cm, A, D.reshape(1, d))

@@ -148,6 +148,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             t2 = time.time()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # pre-0.5 jax: list of one dict
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         rec.update({

@@ -1,8 +1,7 @@
 """Convergence-analysis expressions (Lemma 1, eqs. 7-10, Lemma 3)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core.convergence import (convergence_metric, delta_prime,
                                     expected_delta, lemma1_bound,

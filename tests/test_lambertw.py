@@ -1,8 +1,7 @@
 """Unit + property tests for the pure-JAX Lambert W (principal branch)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core.lambertw import INV_E, lambertw
 

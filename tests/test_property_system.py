@@ -2,8 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core.channel import CellConfig, rate_nats, tx_energy_j
 from repro.fl.state import init_fl_state, masked_aggregate, pseudo_gradients
