@@ -12,8 +12,8 @@ from repro import configs
 from repro.core import CellConfig, ProblemSpec
 from repro.core.channel import channel_gains, sample_positions
 from repro.core.selection import ProposedOnline, realize
-from repro.data import make_token_stream
-from repro.fl.distributed import fl_train_step, init_dist_state
+from repro.data import Dataset, data_stream_key, from_client_datasets, make_token_stream
+from repro.fl.distributed import fl_train_step_from_store, init_dist_state
 
 
 def main():
@@ -33,9 +33,16 @@ def main():
     h = channel_gains(jax.random.PRNGKey(1), pos, args.rounds).T
     policy = ProposedOnline(spec)
 
-    ds = make_token_stream(jax.random.PRNGKey(2), n_seqs=K * B * args.rounds,
+    # each client owns a fixed corpus shard (device-resident store); every
+    # round samples its [K, B, S] batch on device from fold_in(data_key, t)
+    # — no [T, K, B, S] host pre-stack, so the horizon is memory-free
+    ds = make_token_stream(jax.random.PRNGKey(2), n_seqs=K * 4 * B,
                            vocab=cfg.vocab, seq_len=S)
-    toks = ds.x.reshape(args.rounds, K, B, S)
+    per_client = ds.x.reshape(K, 4 * B, S)
+    store = from_client_datasets(
+        [Dataset(per_client[k], jnp.zeros((4 * B,), jnp.int32), cfg.vocab)
+         for k in range(K)])
+    data_key = data_stream_key(2)
     state = init_dist_state(jax.random.PRNGKey(3), cfg, K)
     key = jax.random.PRNGKey(4)
     print(f"[llm-fl] {cfg.name}: K={K} clients, probabilistic selection")
@@ -44,7 +51,8 @@ def main():
         dec = policy.decide(t, h[:, t])
         key, sub = jax.random.split(key)
         mask = realize(sub, dec)
-        state, m = fl_train_step(state, cfg, {"tokens": toks[t]}, mask, 0.05)
+        state, m = fl_train_step_from_store(state, cfg, store, data_key,
+                                            jnp.int32(t), mask, 0.05, B)
         loss = float(m["loss"])
         first = loss if first is None else first
         last = loss

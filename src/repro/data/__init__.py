@@ -1,8 +1,19 @@
-"""Data substrate: synthetic datasets, the paper's non-IID partitioner,
-batching pipeline."""
+"""Data substrate: synthetic datasets, non-IID partitioners (host greedy +
+jittable index-op variants), host batching pipeline, and the device-resident
+federated store with on-device per-round sampling and streaming fallback."""
+from .device import (DeviceDataStore, StreamingSampler, choose_data_path,
+                     data_stream_key, dirichlet_assignment, dirichlet_store,
+                     from_client_datasets, gather_round, label_histogram,
+                     round_indices, sample_batch, sample_round,
+                     shard_assignment, shard_store, stack_rounds_reference)
 from .noniid import heterogeneity, shard_noniid
 from .pipeline import BatchIterator, client_batches
 from .synthetic import Dataset, make_cifar_like, make_mnist_like, make_token_stream
 
 __all__ = ["Dataset", "make_mnist_like", "make_cifar_like", "make_token_stream",
-           "shard_noniid", "heterogeneity", "BatchIterator", "client_batches"]
+           "shard_noniid", "heterogeneity", "BatchIterator", "client_batches",
+           "DeviceDataStore", "StreamingSampler", "choose_data_path",
+           "data_stream_key", "dirichlet_assignment", "dirichlet_store",
+           "from_client_datasets", "gather_round", "label_histogram",
+           "round_indices", "sample_batch", "sample_round",
+           "shard_assignment", "shard_store", "stack_rounds_reference"]

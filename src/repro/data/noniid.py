@@ -35,7 +35,14 @@ def shard_noniid(key: jax.Array, ds: Dataset, num_clients: int,
         for s in np.array_split(idx, shards_per_class):
             shards.append((c, s))
 
-    # greedy assignment: each client takes d shards with distinct labels
+    # greedy assignment: each client takes d shards with distinct labels.
+    # When no remaining shard carries a label the client still lacks (e.g.
+    # d > C, or an unlucky shuffle near the end), the distinct-label
+    # constraint is relaxed for that slot — the client takes the first
+    # remaining shard — so every shard is always assigned and no client
+    # silently ends up short of d shards (the old code skipped the slot,
+    # stranding shards and crashing on np.concatenate([]) for empty
+    # clients).
     rng.shuffle(shards)
     clients: list[list[np.ndarray]] = [[] for _ in range(num_clients)]
     client_labels: list[set] = [set() for _ in range(num_clients)]
@@ -43,15 +50,19 @@ def shard_noniid(key: jax.Array, ds: Dataset, num_clients: int,
     remaining = list(shards)
     for _ in range(d):
         for k in range(num_clients):
-            for i, (c, s) in enumerate(remaining):
-                if c not in client_labels[k]:
-                    clients[k].append(s)
-                    client_labels[k].add(c)
-                    remaining.pop(i)
-                    break
+            pick = next((i for i, (c, _) in enumerate(remaining)
+                         if c not in client_labels[k]), 0)
+            c, s = remaining.pop(pick)
+            clients[k].append(s)
+            client_labels[k].add(c)
 
     out = []
     for k in range(num_clients):
+        if not clients[k] or sum(len(s) for s in clients[k]) == 0:
+            raise ValueError(
+                f"client {k} received no examples: {len(y)} examples over "
+                f"{d * num_clients} shards leave some shards empty — use "
+                f"fewer clients, smaller d, or more data")
         idx = np.concatenate(clients[k])
         rng.shuffle(idx)
         out.append(Dataset(jnp.asarray(x[idx]), jnp.asarray(y[idx]),

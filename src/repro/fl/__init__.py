@@ -1,7 +1,8 @@
 """FL runtime: scan-based async simulation engine + mega-scale distributed step."""
 from .engine import (MatrixResult, RoundTrace, SimConfig, SimResult,
-                     build_scan_sim, grant_forced_bandwidth, make_runner,
-                     run_scenario_matrix, run_seed_matrix, run_simulation_scan,
+                     build_chunk_sim, build_scan_sim, grant_forced_bandwidth,
+                     make_runner, resolve_data_path, run_scenario_matrix,
+                     run_seed_matrix, run_simulation_scan,
                      stack_round_batches)
 from .simulator import run_simulation, run_simulation_legacy
 from .state import (FLState, init_fl_state, masked_aggregate,
@@ -9,7 +10,7 @@ from .state import (FLState, init_fl_state, masked_aggregate,
 
 __all__ = ["SimConfig", "SimResult", "run_simulation",
            "run_simulation_legacy", "run_simulation_scan", "build_scan_sim",
-           "make_runner",
+           "build_chunk_sim", "make_runner", "resolve_data_path",
            "run_seed_matrix", "run_scenario_matrix", "stack_round_batches",
            "grant_forced_bandwidth", "MatrixResult", "RoundTrace", "FLState",
            "init_fl_state", "masked_aggregate", "pseudo_gradients",

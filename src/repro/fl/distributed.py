@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..data.device import DeviceDataStore, sample_batch
 from ..models import transformer as T
 
 
@@ -163,6 +164,28 @@ def fl_train_step(state: DistFLState, cfg: ArchConfig, batch: Any,
     anchor = jax.tree_util.tree_map(sel, state.anchor_params, new_global)
     metrics = {"loss": losses.mean(), "participants": mask.sum()}
     return DistFLState(new_global, client, anchor), metrics
+
+
+@partial(jax.jit, static_argnames=("cfg", "batch_size", "local_iters",
+                                   "micro_batches"))
+def fl_train_step_from_store(state: DistFLState, cfg: ArchConfig,
+                             store: DeviceDataStore, data_key: jax.Array,
+                             t: jax.Array, mask: jax.Array, lr: float,
+                             batch_size: int, local_iters: int = 1,
+                             micro_batches: int = 1) -> tuple[DistFLState,
+                                                              dict]:
+    """Replica-mode round fed from a :class:`DeviceDataStore`.
+
+    The round's ``[K, B, S]`` token batch is gathered on device from the
+    ``fold_in(data_key, t)`` stream and fused into the same jitted program
+    as the train step — no per-round host stacking, and peak data memory is
+    the store itself (independent of the horizon).  This is the mega-arch
+    analogue of the scan engine's device data path.
+    """
+    toks, _ = sample_batch(store, data_key, t, batch_size)
+    return fl_train_step(state, cfg, {"tokens": toks}, mask, lr,
+                         local_iters=local_iters,
+                         micro_batches=micro_batches)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

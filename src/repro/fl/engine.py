@@ -38,6 +38,9 @@ import numpy as np
 
 from ..core.channel import CellConfig, rate_nats
 from ..core.selection import PolicyFn, as_policy_fn, online_policy
+from ..data.device import (StreamingSampler, choose_data_path,
+                           data_stream_key, from_client_datasets,
+                           sample_round)
 from ..data.pipeline import BatchIterator, client_batches
 from ..data.synthetic import Dataset
 from ..optim import Optimizer, sgd
@@ -59,6 +62,12 @@ class SimConfig:
                                        # the first decent fade *before* the
                                        # deadline forces a deep-fade upload
     eval_batch: int = 2048
+    # data path: "auto" picks "device" (DeviceDataStore + in-scan sampling)
+    # when the padded store fits the memory budget, else "stream" (host
+    # blocks, double-buffered round-chunk prefetch).  "prestack" is the
+    # legacy [T, K, L, B] pre-stack, kept as the parity/benchmark reference.
+    data_path: str = "auto"
+    stream_chunk: int = 256            # rounds per streamed chunk
 
 
 class SimResult(NamedTuple):
@@ -215,6 +224,25 @@ def stack_round_batches(client_data: Sequence[Dataset], cfg: SimConfig):
     return jnp.stack(xs), jnp.stack(ys)    # [T, K, L, B, ...]
 
 
+def resolve_data_path(client_data: Sequence[Dataset], cfg: SimConfig,
+                      override: str | None = None,
+                      budget_bytes: int | None = None) -> str:
+    """Resolve ``cfg.data_path`` to a concrete path name.
+
+    ``"auto"`` consults :func:`repro.data.device.choose_data_path` (padded
+    store footprint vs the device memory budget); explicit names pass
+    through.  Both engines (scan and legacy host loop) resolve through this
+    single function so they always consume the same minibatch stream.
+    """
+    path = override or cfg.data_path
+    if path == "auto":
+        path = choose_data_path(client_data, budget_bytes)
+    if path not in ("prestack", "device", "stream"):
+        raise ValueError(f"unknown data_path {path!r} "
+                         "(expected auto|prestack|device|stream)")
+    return path
+
+
 # ---------------------------------------------------------------------------
 # the scan engine
 # ---------------------------------------------------------------------------
@@ -234,16 +262,67 @@ def _client_mesh(num_clients: int):
     return Mesh(np.asarray(devs[:d]), ("k",))
 
 
+def _make_round_step(vtrain: Callable, loss_fn: Callable, acc_fn: Callable,
+                     cfg: SimConfig, cell: CellConfig, num_clients: int,
+                     policy_fn: PolicyFn, hoist: bool):
+    """The per-round transition shared by every execution mode (full scan
+    over pre-stacked batches, in-scan device-store sampling, streaming
+    round-chunks): protocol Steps 1-5, energy ledger, strided eval."""
+    K = num_clients
+
+    def round_step(carry, t, h_t, xb, yb, pw, base_key, test_x, test_y):
+        state, energy = carry
+        # --- Steps 2-4: policy, Bernoulli draws, Δ_k, energy (eq. 5) -------
+        probs, w = pw if hoist else policy_fn(t, h_t, state)
+        mask, forced, w, e_round = apply_round_decision(
+            probs, w, t, h_t, state, base_key, cfg, cell, K)
+        energy = energy + e_round
+        # --- Step 1 (continuous local training) + Steps 4-5 ----------------
+        client = vtrain(state.client_params, xb, yb)
+        state = state._replace(client_params=client)
+        deltas = pseudo_gradients(state)
+        new_global = masked_aggregate(state.global_params, deltas, mask, K)
+        state = broadcast_to_participants(state, new_global, mask)
+
+        # --- strided eval (stays on device; read back once at the end) -----
+        def eval_now(p):
+            return (jnp.asarray(acc_fn(p, test_x, test_y), jnp.float32),
+                    jnp.asarray(loss_fn(p, test_x, test_y), jnp.float32))
+
+        def skip_eval(p):
+            del p
+            return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+
+        do_eval = jnp.logical_or(t % cfg.eval_every == 0,
+                                 t == cfg.rounds - 1)
+        acc, loss = jax.lax.cond(do_eval, eval_now, skip_eval,
+                                 state.global_params)
+        return (state, energy), RoundTrace(mask, e_round, acc, loss, do_eval)
+
+    return round_step
+
+
 def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
                    cfg: SimConfig, cell: CellConfig, num_clients: int,
-                   policy_fn: PolicyFn, shard_clients: bool | None = None):
+                   policy_fn: PolicyFn, shard_clients: bool | None = None,
+                   data_mode: str = "prestack"):
     """Build the pure simulation function (one ``lax.scan`` over all rounds).
 
-    The returned ``simulate(params, xb_all, yb_all, h_rounds, base_key,
-    test_x, test_y) -> (FLState, energy [K], RoundTrace[T])`` is traceable
-    end-to-end: jit it for a single run, vmap it over ``(base_key, h_rounds)``
-    (and a traced ρ via the policy closure) for scenario fan-out.
-    ``h_rounds`` is round-major ``[T, K]``.
+    ``data_mode`` selects how the scan obtains its minibatches:
+
+    * ``"prestack"`` — ``simulate(params, xb_all, yb_all, h_rounds, base_key,
+      test_x, test_y)``: batches arrive as ``[T, K, L, B, ...]`` scan inputs
+      (the legacy layout; peak memory grows linearly in T).
+    * ``"device"`` — ``simulate(params, store, data_key, h_rounds, base_key,
+      test_x, test_y)``: each round gathers its batch from a
+      :class:`~repro.data.device.DeviceDataStore` *inside* the scan body via
+      the ``fold_in(data_key, t)`` stream — no T-proportional buffer exists
+      anywhere in the program.
+
+    Either way the returned function yields ``(FLState, energy [K],
+    RoundTrace[T])`` and is traceable end-to-end: jit it for a single run,
+    vmap it over ``(base_key, h_rounds)`` (and a traced ρ via the policy
+    closure) for scenario fan-out.  ``h_rounds`` is round-major ``[T, K]``.
 
     Policies tagged ``state_free`` (all five paper schemes) are hoisted out
     of the sequential scan: every round's ``(probs, w)`` is computed in one
@@ -254,9 +333,11 @@ def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
     ``shard_clients`` (default auto): when multiple devices are visible and
     divide K, the client axis — the data-parallel mesh axis of the FL state —
     is sharded via ``shard_map`` for the local-training leg, and GSPMD
-    propagates the sharding through the aggregation/broadcast tree ops.
-    Auto-disabled on a single device; pass ``False`` to force off (the vmap
-    matrix runners do, sharding does not compose with their lane axis).
+    propagates the sharding through the aggregation/broadcast tree ops (in
+    device mode the store's client axis is placed on the same mesh by
+    ``make_runner``).  Auto-disabled on a single device; pass ``False`` to
+    force off (the vmap matrix runners do, sharding does not compose with
+    their lane axis).
     """
     K = num_clients
     vtrain = make_local_train(loss_fn, opt)
@@ -268,63 +349,91 @@ def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
         vtrain = shard_map(vtrain, mesh,
                            in_specs=(P("k"), P("k"), P("k")),
                            out_specs=P("k"))
+    round_step = _make_round_step(vtrain, loss_fn, acc_fn, cfg, cell, K,
+                                  policy_fn, hoist)
 
     def hoisted_policy(h_rounds):
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
         return jax.vmap(lambda t, h: policy_fn(t, h, None))(ts, h_rounds)
 
-    def simulate(params, xb_all, yb_all, h_rounds, base_key, test_x, test_y,
-                 pw_all=None):
-        ts_all = jnp.arange(cfg.rounds, dtype=jnp.int32)
-        if hoist and pw_all is None:
-            pw_all = hoisted_policy(h_rounds)
-        elif not hoist:
-            # dummy per-round operands; the policy runs in the scan body
-            pw_all = (jnp.zeros((cfg.rounds, 0)),) * 2
+    def _resolve_pw(h_rounds, pw_all):
+        if hoist:
+            return hoisted_policy(h_rounds) if pw_all is None else pw_all
+        # dummy per-round operands; the policy runs in the scan body
+        return (jnp.zeros((cfg.rounds, 0)),) * 2
 
-        def eval_now(p):
-            return (jnp.asarray(acc_fn(p, test_x, test_y), jnp.float32),
-                    jnp.asarray(loss_fn(p, test_x, test_y), jnp.float32))
-
-        def skip_eval(p):
-            del p
-            return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
-
-        def step(carry, xs):
-            state, energy = carry
-            t, h_t, xb, yb, pw = xs
-            # --- Steps 2-4: policy, Bernoulli draws, Δ_k, energy (eq. 5) ---
-            probs, w = pw if hoist else policy_fn(t, h_t, state)
-            mask, forced, w, e_round = apply_round_decision(
-                probs, w, t, h_t, state, base_key, cfg, cell, K)
-            energy = energy + e_round
-            # --- Step 1 (continuous local training) + Steps 4-5 ------------
-            client = vtrain(state.client_params, xb, yb)
-            state = state._replace(client_params=client)
-            deltas = pseudo_gradients(state)
-            new_global = masked_aggregate(state.global_params, deltas, mask, K)
-            state = broadcast_to_participants(state, new_global, mask)
-            # --- strided eval (stays on device; read back once at the end) -
-            do_eval = jnp.logical_or(t % cfg.eval_every == 0,
-                                     t == cfg.rounds - 1)
-            acc, loss = jax.lax.cond(do_eval, eval_now, skip_eval,
-                                     state.global_params)
-            return (state, energy), RoundTrace(mask, e_round, acc, loss,
-                                               do_eval)
-
+    def _scan(params, step, xs):
         state0 = init_fl_state(params, K)
         energy0 = jnp.zeros((K,), jnp.float32)
-        (state, energy), traces = jax.lax.scan(
-            step, (state0, energy0), (ts_all, h_rounds, xb_all, yb_all,
-                                      pw_all))
+        (state, energy), traces = jax.lax.scan(step, (state0, energy0), xs)
         return state, energy, traces
+
+    if data_mode == "prestack":
+        def simulate(params, xb_all, yb_all, h_rounds, base_key, test_x,
+                     test_y, pw_all=None):
+            ts_all = jnp.arange(cfg.rounds, dtype=jnp.int32)
+            pw_all = _resolve_pw(h_rounds, pw_all)
+
+            def step(carry, xs):
+                t, h_t, xb, yb, pw = xs
+                return round_step(carry, t, h_t, xb, yb, pw, base_key,
+                                  test_x, test_y)
+
+            return _scan(params, step, (ts_all, h_rounds, xb_all, yb_all,
+                                        pw_all))
+    elif data_mode == "device":
+        def simulate(params, store, data_key, h_rounds, base_key, test_x,
+                     test_y, pw_all=None):
+            ts_all = jnp.arange(cfg.rounds, dtype=jnp.int32)
+            pw_all = _resolve_pw(h_rounds, pw_all)
+
+            def step(carry, xs):
+                t, h_t, pw = xs
+                xb, yb = sample_round(store, data_key, t, cfg.local_iters,
+                                      cfg.batch_size)
+                return round_step(carry, t, h_t, xb, yb, pw, base_key,
+                                  test_x, test_y)
+
+            return _scan(params, step, (ts_all, h_rounds, pw_all))
+    else:
+        raise ValueError(f"unknown data_mode {data_mode!r}")
 
     # under client-axis sharding the tiny [T, K] policy solve pays SPMD
     # partitioning overhead inside the main program — callers (make_runner)
     # run it as its own replicated jit and pass pw_all in
     simulate.split_policy = hoist and mesh is not None
     simulate.hoisted_policy = hoisted_policy
+    simulate.mesh = mesh
     return simulate
+
+
+def build_chunk_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
+                    cfg: SimConfig, cell: CellConfig, num_clients: int,
+                    policy_fn: PolicyFn):
+    """Streaming building block: the identical round transition scanned over
+    one round-*chunk* with an explicit ``(FLState, energy)`` carry.
+
+    ``chunk(carry, ts, h, xb, yb, pw, base_key, test_x, test_y)`` consumes
+    absolute round ids ``ts`` (so ``fold_in(·, t)`` streams and the
+    eval-stride/final-round conditions match the single-scan engines
+    bit-wise) and chunk-major batch arrays ``[C, K, L, B, ...]``; the host
+    loop threads the carry across chunks (see ``make_runner``'s stream
+    path)."""
+    vtrain = make_local_train(loss_fn, opt)
+    hoist = getattr(policy_fn, "state_free", False)
+    round_step = _make_round_step(vtrain, loss_fn, acc_fn, cfg, cell,
+                                  num_clients, policy_fn, hoist)
+
+    def chunk(carry, ts, h, xb, yb, pw, base_key, test_x, test_y):
+        def step(c, xs):
+            t, h_t, xbt, ybt, pwt = xs
+            return round_step(c, t, h_t, xbt, ybt, pwt, base_key, test_x,
+                              test_y)
+
+        return jax.lax.scan(step, carry, (ts, h, xb, yb, pw))
+
+    chunk.hoist = hoist
+    return chunk
 
 
 def _to_result(state, energy, traces, cfg: SimConfig) -> SimResult:
@@ -343,37 +452,115 @@ def _to_result(state, energy, traces, cfg: SimConfig) -> SimResult:
     )
 
 
-def make_runner(loss_fn: Callable, acc_fn: Callable,
-                client_data: Sequence[Dataset], test_ds: Dataset, policy,
-                cell: CellConfig, cfg: SimConfig,
-                opt: Optimizer | None = None,
-                shard_clients: bool | None = None) -> Callable:
-    """Pre-build the compiled scan runner for repeated invocations.
-
-    Returns ``runner(params, h_all, seed=None) -> SimResult``; the jitted
-    scan program and the stacked batch arrays are built once and reused, so
-    successive calls (new channel draws, new PRNG seeds, warm benchmarking)
-    pay zero re-trace/re-stack cost.
-    """
+def _make_stream_runner(loss_fn: Callable, acc_fn: Callable,
+                        client_data: Sequence[Dataset], test_x, test_y,
+                        policy_fn: PolicyFn, cell: CellConfig, cfg: SimConfig,
+                        opt: Optimizer) -> Callable:
+    """Host-streaming execution: the horizon is split into
+    ``cfg.stream_chunk``-round segments; chunk ``i+1``'s batches are gathered
+    host-side (same ``fold_in`` index stream as the device store — batches
+    are bit-identical) and ``device_put`` while chunk ``i`` computes, so
+    device-resident data never exceeds two chunks regardless of T or the
+    dataset size."""
     K = len(client_data)
-    opt = opt or sgd(cfg.lr)
-    policy_fn = as_policy_fn(policy)
-    xb_all, yb_all = stack_round_batches(client_data, cfg)
-    test_x = test_ds.x[: cfg.eval_batch]
-    test_y = test_ds.y[: cfg.eval_batch]
-    sim = build_scan_sim(loss_fn, acc_fn, opt, cfg, cell, K, policy_fn,
-                         shard_clients=shard_clients)
-    simulate = jax.jit(sim)
-    policy_pre = jax.jit(sim.hoisted_policy) if sim.split_policy else None
+    T = cfg.rounds
+    sampler = StreamingSampler(client_data, data_stream_key(cfg.seed),
+                               cfg.local_iters, cfg.batch_size)
+    raw = build_chunk_sim(loss_fn, acc_fn, opt, cfg, cell, K, policy_fn)
+    hoist = raw.hoist
+    chunk_fn = jax.jit(raw)
+    ts_full = jnp.arange(T, dtype=jnp.int32)
+    pol = (jax.jit(jax.vmap(lambda t, h: policy_fn(t, h, None)))
+           if hoist else None)
+    C = max(1, int(cfg.stream_chunk))
+    bounds = [(t0, min(t0 + C, T)) for t0 in range(0, T, C)]
 
     def runner(params, h_all, seed: int | None = None) -> SimResult:
         key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
         h_rounds = jnp.swapaxes(h_all, 0, 1)
-        pw = policy_pre(h_rounds) if policy_pre is not None else None
-        state, energy, traces = simulate(
-            params, xb_all, yb_all, h_rounds, key, test_x, test_y,
-            pw_all=pw)
+        pw_full = (pol(ts_full, h_rounds) if hoist
+                   else (jnp.zeros((T, 0)),) * 2)
+        carry = (init_fl_state(params, K), jnp.zeros((K,), jnp.float32))
+        buf = sampler.chunk(*bounds[0])
+        traces = []
+        for i, (t0, t1) in enumerate(bounds):
+            pw_c = jax.tree_util.tree_map(lambda p: p[t0:t1], pw_full)
+            carry, tr = chunk_fn(carry, ts_full[t0:t1], h_rounds[t0:t1],
+                                 buf[0], buf[1], pw_c, key, test_x, test_y)
+            if i + 1 < len(bounds):   # prefetch overlaps the async chunk
+                buf = sampler.chunk(*bounds[i + 1])
+            traces.append(tr)
+        state, energy = carry
+        traces = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *traces)
         return _to_result(state, energy, traces, cfg)
+
+    return runner
+
+
+def make_runner(loss_fn: Callable, acc_fn: Callable,
+                client_data: Sequence[Dataset], test_ds: Dataset, policy,
+                cell: CellConfig, cfg: SimConfig,
+                opt: Optimizer | None = None,
+                shard_clients: bool | None = None,
+                data_path: str | None = None,
+                data_budget_bytes: int | None = None) -> Callable:
+    """Pre-build the compiled scan runner for repeated invocations.
+
+    Returns ``runner(params, h_all, seed=None) -> SimResult``; the jitted
+    scan program and the data source (device store, streamed blocks, or the
+    legacy pre-stack) are built once and reused, so successive calls (new
+    channel draws, new PRNG seeds, warm benchmarking) pay zero
+    re-trace/re-pack cost.
+
+    ``data_path`` overrides ``cfg.data_path`` (``"auto"`` resolves by
+    footprint; see :func:`resolve_data_path`).  On the device path the
+    store's client axis is placed on the same mesh as the FL state whenever
+    client-axis sharding is active.
+    """
+    K = len(client_data)
+    opt = opt or sgd(cfg.lr)
+    policy_fn = as_policy_fn(policy)
+    test_x = test_ds.x[: cfg.eval_batch]
+    test_y = test_ds.y[: cfg.eval_batch]
+    path = resolve_data_path(client_data, cfg, data_path, data_budget_bytes)
+
+    if path == "stream":
+        return _make_stream_runner(loss_fn, acc_fn, client_data, test_x,
+                                   test_y, policy_fn, cell, cfg, opt)
+
+    sim = build_scan_sim(loss_fn, acc_fn, opt, cfg, cell, K, policy_fn,
+                         shard_clients=shard_clients, data_mode=path)
+    simulate = jax.jit(sim)
+    policy_pre = jax.jit(sim.hoisted_policy) if sim.split_policy else None
+
+    if path == "device":
+        store = from_client_datasets(client_data)
+        if sim.mesh is not None:
+            from ..launch.sharding import client_axis_shardings
+            store = jax.device_put(
+                store, client_axis_shardings(store, sim.mesh, "k"))
+        data_key = data_stream_key(cfg.seed)
+
+        def runner(params, h_all, seed: int | None = None) -> SimResult:
+            key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+            h_rounds = jnp.swapaxes(h_all, 0, 1)
+            pw = policy_pre(h_rounds) if policy_pre is not None else None
+            state, energy, traces = simulate(
+                params, store, data_key, h_rounds, key, test_x, test_y,
+                pw_all=pw)
+            return _to_result(state, energy, traces, cfg)
+    else:
+        xb_all, yb_all = stack_round_batches(client_data, cfg)
+
+        def runner(params, h_all, seed: int | None = None) -> SimResult:
+            key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+            h_rounds = jnp.swapaxes(h_all, 0, 1)
+            pw = policy_pre(h_rounds) if policy_pre is not None else None
+            state, energy, traces = simulate(
+                params, xb_all, yb_all, h_rounds, key, test_x, test_y,
+                pw_all=pw)
+            return _to_result(state, energy, traces, cfg)
 
     return runner
 
@@ -434,20 +621,38 @@ def run_seed_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
     ``h_stack: [S, K, T]`` stacked channel realizations (one per lane —
     seeds, placements, fading draws); ``seeds`` gives each lane its own
     participation PRNG stream.  One compiled device program runs every lane.
+
+    Data rides along un-vmapped: the device store (or the legacy pre-stack
+    when ``cfg.data_path`` forces it) is shared by all lanes, and the
+    minibatch stream is keyed by ``cfg.seed`` only — lanes differ in
+    channel/participation randomness, not in data.  A resolved ``"stream"``
+    path falls back to the device store here (lane fan-out multiplies every
+    buffer anyway, so host streaming buys nothing under vmap).
     """
     K = h_stack.shape[1]
     opt = opt or sgd(cfg.lr)
     policy_fn = as_policy_fn(policy)
-    xb_all, yb_all = stack_round_batches(client_data, cfg)
     test_x = test_ds.x[: cfg.eval_batch]
     test_y = test_ds.y[: cfg.eval_batch]
-    simulate = build_scan_sim(loss_fn, acc_fn, opt, cfg, cell, K, policy_fn,
-                              shard_clients=False)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
     h_rounds = jnp.swapaxes(h_stack, 1, 2)             # [S, T, K]
-    fan = jax.jit(jax.vmap(
-        lambda key, h: simulate(init_params, xb_all, yb_all, h, key,
-                                test_x, test_y)))
+    path = resolve_data_path(client_data, cfg)
+    if path == "prestack":
+        xb_all, yb_all = stack_round_batches(client_data, cfg)
+        simulate = build_scan_sim(loss_fn, acc_fn, opt, cfg, cell, K,
+                                  policy_fn, shard_clients=False)
+        fan = jax.jit(jax.vmap(
+            lambda key, h: simulate(init_params, xb_all, yb_all, h, key,
+                                    test_x, test_y)))
+    else:
+        store = from_client_datasets(client_data)
+        data_key = data_stream_key(cfg.seed)
+        simulate = build_scan_sim(loss_fn, acc_fn, opt, cfg, cell, K,
+                                  policy_fn, shard_clients=False,
+                                  data_mode="device")
+        fan = jax.jit(jax.vmap(
+            lambda key, h: simulate(init_params, store, data_key, h, key,
+                                    test_x, test_y)))
     _, energy, traces = fan(keys, h_rounds)
     return _matrix_result(energy, traces)
 
@@ -468,17 +673,24 @@ def run_scenario_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
     K = h_stack.shape[1]
     cell = spec.cell
     opt = opt or sgd(cfg.lr)
-    xb_all, yb_all = stack_round_batches(client_data, cfg)
     test_x = test_ds.x[: cfg.eval_batch]
     test_y = test_ds.y[: cfg.eval_batch]
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
     h_rounds = jnp.swapaxes(h_stack, 1, 2)             # [S, T, K]
+    # stream resolves to the device store here, as in run_seed_matrix
+    path = resolve_data_path(client_data, cfg)
+    if path == "prestack":
+        data = stack_round_batches(client_data, cfg)
+    else:
+        data = (from_client_datasets(client_data), data_stream_key(cfg.seed))
 
     def one(rho, key, h):
         simulate = build_scan_sim(loss_fn, acc_fn, opt, cfg, cell, K,
                                   online_policy(spec, rho=rho),
-                                  shard_clients=False)
-        return simulate(init_params, xb_all, yb_all, h, key, test_x, test_y)
+                                  shard_clients=False,
+                                  data_mode=("prestack" if path == "prestack"
+                                             else "device"))
+        return simulate(init_params, data[0], data[1], h, key, test_x, test_y)
 
     lanes = jax.vmap(one, in_axes=(None, 0, 0))        # scenario lanes
     fan = jax.jit(jax.vmap(lanes, in_axes=(0, None, None)))  # ρ axis

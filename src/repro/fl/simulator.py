@@ -26,11 +26,14 @@ import numpy as np
 
 from ..core.channel import CellConfig
 from ..core.selection import Policy, as_policy_fn
+from ..data.device import (StreamingSampler, data_stream_key,
+                           from_client_datasets, sample_round)
 from ..data.pipeline import BatchIterator, client_batches
 from ..data.synthetic import Dataset
 from ..optim import Optimizer, sgd
 from .engine import (SimConfig, SimResult, empty_client_batches,
-                     make_local_train, round_decision, run_simulation_scan)
+                     make_local_train, resolve_data_path, round_decision,
+                     run_simulation_scan)
 from .state import (FLState, broadcast_to_participants, init_fl_state,
                     masked_aggregate, pseudo_gradients)
 
@@ -86,9 +89,12 @@ def run_simulation_legacy(init_params: Any,
     Each round syncs mask/energy through numpy and dispatches the jitted
     round transition separately — kept as the wall-clock baseline for
     ``benchmarks/bench_engine.py`` and as the reference in the scan-parity
-    tests.  Decision logic and PRNG streams are shared with the scan engine
-    (``engine.round_decision`` with ``fold_in(seed, t)``), so results match
-    the scan engine bit-wise on identical configs.
+    tests.  Decision logic, PRNG streams AND the data path are shared with
+    the scan engine (``engine.round_decision`` with ``fold_in(seed, t)``;
+    ``resolve_data_path`` picks the same minibatch source — device-store
+    ``fold_in`` sampling by default, ``BatchIterator`` pre-stack streams
+    when ``cfg.data_path == "prestack"``), so results match the scan engine
+    bit-wise on identical configs.
     """
     K = len(client_data)
     opt = opt or sgd(cfg.lr)
@@ -100,8 +106,21 @@ def run_simulation_legacy(init_params: Any,
     decide = jax.jit(lambda t, h_t, st: round_decision(
         policy_fn, t, h_t, st, base_key, cfg, cell, K))
 
-    iters = [BatchIterator(ds, cfg.batch_size, seed=cfg.seed + 17 * k)
-             for k, ds in enumerate(client_data)]
+    data_path = resolve_data_path(client_data, cfg)
+    data_key = data_stream_key(cfg.seed)
+    if data_path == "prestack":
+        iters = [BatchIterator(ds, cfg.batch_size, seed=cfg.seed + 17 * k)
+                 for k, ds in enumerate(client_data)]
+    elif data_path == "device":  # per-round jitted draw from the store
+        store = from_client_datasets(client_data)
+        sample = jax.jit(lambda t: sample_round(
+            store, data_key, t, cfg.local_iters, cfg.batch_size))
+    else:  # stream: data stays host-side (it was chosen because the store
+        # does not fit on device); same index stream, one-round chunks
+        sampler = StreamingSampler(client_data, data_key, cfg.local_iters,
+                                   cfg.batch_size)
+        sample = lambda t: tuple(c[0] for c in  # noqa: E731
+                                 sampler.chunk(int(t), int(t) + 1))
 
     energy = np.zeros((K,), np.float32)
     energy_tl = np.zeros((cfg.rounds,))
@@ -113,15 +132,17 @@ def run_simulation_legacy(init_params: Any,
     eval_fn = jax.jit(lambda p: (acc_fn(p, test_x, test_y),
                                  loss_fn(p, test_x, test_y)))
 
-    if cfg.local_iters == 0:  # protocol-only runs (benchmarks)
+    if data_path == "prestack" and cfg.local_iters == 0:
         empty_x, empty_y = empty_client_batches(client_data, cfg)
 
     for t in range(cfg.rounds):
-        # --- stack local_iters batches per client; the per-round host
-        # stacking is the legacy loop's measured cost, but consumption order
-        # and iterator seeds must stay identical to stack_round_batches or
-        # the scan-parity tests break ------------------------------------
-        if cfg.local_iters == 0:
+        # --- per-round batches; each data path must draw exactly what the
+        # scan engine consumes at round t (prestack: iterator seeds and
+        # consumption order match stack_round_batches; device: the shared
+        # fold_in(data_key, t) store stream) or scan-parity breaks ---------
+        if data_path != "prestack":
+            xb, yb = sample(jnp.int32(t))
+        elif cfg.local_iters == 0:
             xb, yb = empty_x, empty_y
         else:
             xs, ys = [], []

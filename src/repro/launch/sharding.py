@@ -247,5 +247,24 @@ def cache_shardings(cache_shapes: Any, mesh, batch: int) -> Any:
     return jax.tree_util.tree_map(one, cache_shapes)
 
 
+def client_axis_shardings(tree: Any, mesh, axis: str) -> Any:
+    """Shardings for client-stacked data pytrees (e.g. the
+    ``DeviceDataStore``'s ``[K, N_max, ...]`` blocks): the leading K axis
+    maps onto mesh axis ``axis`` — the same axis the FL state's client
+    stack lives on — so per-client shards are co-located with the client
+    models that train on them; everything else replicates.  Divisibility-
+    guarded like every rule here: a leaf whose leading dim does not divide
+    the axis replicates entirely."""
+    size = _axis_size(mesh, axis)
+
+    def one(leaf):
+        shp = getattr(leaf, "shape", ())
+        if len(shp) >= 1 and shp[0] % size == 0 and shp[0] >= size:
+            return NamedSharding(mesh, P(axis, *([None] * (len(shp) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, tree)
+
+
 def replicated(mesh):
     return NamedSharding(mesh, P())

@@ -52,6 +52,34 @@ def test_noniid_sharding(d):
         assert len(labels) <= d  # at most d distinct labels per client
 
 
+def test_noniid_adversarial_d_exceeds_labels():
+    """Regression (greedy deadlock): with d > C no shard with an unused
+    label exists after the first C slots — the old greedy silently assigned
+    fewer than d shards, stranding data.  The relaxed fallback must assign
+    every shard: all examples kept, every client non-empty."""
+    C, K, d = 10, 2, 15                      # d·K = 30 shards, 3 per class
+    n = 600
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.integers(0, C, n), jnp.int32)
+    ds = Dataset(jnp.arange(n, dtype=jnp.float32)[:, None], y, C)
+    for seed in range(5):                    # deadlock for every shuffle
+        clients = shard_noniid(jax.random.PRNGKey(seed), ds, K, d=d)
+        assert sum(len(np.asarray(c.y)) for c in clients) == n
+        assert all(len(np.asarray(c.y)) > 0 for c in clients)
+        # no example lost or duplicated
+        seen = np.sort(np.concatenate([np.asarray(c.x)[:, 0]
+                                       for c in clients]))
+        assert np.array_equal(seen, np.arange(n, dtype=np.float32))
+
+
+def test_noniid_zero_example_client_raises():
+    """A clear error (not np.concatenate([]) crashing) when the data is too
+    small to give every client at least one example."""
+    ds = Dataset(jnp.ones((3, 2)), jnp.asarray([0, 1, 2], jnp.int32), 10)
+    with pytest.raises(ValueError, match="no examples"):
+        shard_noniid(jax.random.PRNGKey(0), ds, num_clients=10, d=1)
+
+
 def test_noniid_heterogeneity_monotone():
     tr, _ = make_mnist_like(jax.random.PRNGKey(0), n_train=4000, n_test=100)
     het = [heterogeneity(shard_noniid(jax.random.PRNGKey(1), tr, 10, d))
