@@ -51,6 +51,43 @@ def realize(key: jax.Array, decision: RoundDecision) -> jax.Array:
     return (u < decision.probs).astype(jnp.float32)
 
 
+def participants_from_mask(mask: jax.Array, bucket: int):
+    """Compact a realized ``[K]`` mask into a padded transmitting index set.
+
+    Returns ``(idx [bucket] int32, valid [bucket] bool, n_tx int32)``:
+    ``idx`` holds the transmitting client ids in ascending order, padded with
+    the out-of-range sentinel ``K`` (scatters with ``mode="drop"`` discard
+    it; gathers clamp it).  Shape-stable under jit — ``bucket`` is static —
+    so the sparse engine's round step is compiled per *bucket*, never per K.
+    When more than ``bucket`` clients transmit, the overflow is truncated;
+    callers must check ``n_tx <= bucket`` (the sparse runner surfaces it as
+    a hard error).
+    """
+    K = mask.shape[0]
+    idx = jnp.nonzero(mask > 0, size=bucket, fill_value=K)[0].astype(jnp.int32)
+    return idx, idx < K, jnp.sum(mask > 0).astype(jnp.int32)
+
+
+def realize_participants(key: jax.Array, decision: RoundDecision,
+                         bucket: int):
+    """Step 3 in index-set form: Bernoulli draw then
+    :func:`participants_from_mask` — what a participant-centric server
+    actually consumes (it never materializes per-population state beyond the
+    ``[K]`` probability vector)."""
+    return participants_from_mask(realize(key, decision), bucket)
+
+
+def participant_bucket(expected: float, cap: int, floor: int = 8) -> int:
+    """Pick a padded participant-bucket size for an expected transmitting
+    count: mean + 6·sqrt(mean) Poisson-tail headroom, rounded up to a power
+    of two, clamped to ``[floor, cap]``.  A small set of bucket sizes keeps
+    one compile per bucket across any population sweep."""
+    m = max(float(expected), 1.0)
+    need = int(m + 6.0 * m ** 0.5 + 4.0)
+    b = 1 << max(int(need) - 1, 1).bit_length()
+    return max(min(b, int(cap)), min(floor, int(cap)))
+
+
 # ---------------------------------------------------------------------------
 # pure policy functions (engine-native)
 # ---------------------------------------------------------------------------

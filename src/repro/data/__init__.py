@@ -2,10 +2,14 @@
 jittable index-op variants), host batching pipeline, and the device-resident
 federated store with on-device per-round sampling and streaming fallback."""
 from .device import (DeviceDataStore, StreamingSampler, choose_data_path,
-                     data_stream_key, dirichlet_assignment, dirichlet_store,
-                     from_client_datasets, gather_round, label_histogram,
-                     round_indices, sample_batch, sample_round,
-                     shard_assignment, shard_store, stack_rounds_reference)
+                     client_round_indices, data_stream_key,
+                     dirichlet_assignment, dirichlet_store,
+                     estimate_store_bytes, from_client_datasets,
+                     gather_participant_rounds, gather_round, label_histogram,
+                     round_indices, round_indices_client_stream, sample_batch,
+                     sample_round, sample_round_client_stream,
+                     shard_assignment, shard_store, stack_rounds_reference,
+                     store_bytes)
 from .noniid import heterogeneity, shard_noniid
 from .pipeline import BatchIterator, client_batches
 from .synthetic import Dataset, make_cifar_like, make_mnist_like, make_token_stream
@@ -14,6 +18,9 @@ __all__ = ["Dataset", "make_mnist_like", "make_cifar_like", "make_token_stream",
            "shard_noniid", "heterogeneity", "BatchIterator", "client_batches",
            "DeviceDataStore", "StreamingSampler", "choose_data_path",
            "data_stream_key", "dirichlet_assignment", "dirichlet_store",
-           "from_client_datasets", "gather_round", "label_histogram",
-           "round_indices", "sample_batch", "sample_round",
-           "shard_assignment", "shard_store", "stack_rounds_reference"]
+           "estimate_store_bytes", "store_bytes", "from_client_datasets",
+           "gather_round", "gather_participant_rounds", "label_histogram",
+           "round_indices", "client_round_indices",
+           "round_indices_client_stream", "sample_batch", "sample_round",
+           "sample_round_client_stream", "shard_assignment", "shard_store",
+           "stack_rounds_reference"]

@@ -157,6 +157,81 @@ def sample_batch(store: DeviceDataStore, data_key: jax.Array, t: jax.Array,
     return xb[:, 0], yb[:, 0]
 
 
+# ---------------------------------------------------------------------------
+# per-client stream: indices a single client can draw without touching the
+# other K-1 rows (the sparse participation path samples participants only)
+# ---------------------------------------------------------------------------
+
+
+def client_round_indices(data_key: jax.Array, t: jax.Array,
+                         client_id: jax.Array, length: jax.Array,
+                         local_iters: int, batch_size: int) -> jax.Array:
+    """``[L, B]`` example indices for one client at round ``t``.
+
+    The stream is keyed ``fold_in(fold_in(data_key, t), client_id)`` — a pure
+    function of ``(data seed, t, k)``, so any *subset* of clients can be
+    sampled without materializing draws for the full population (the
+    participant-centric sparse path gathers only the transmitting set).
+    Like :func:`round_indices`, draws are uniform over ``[0, length)`` with
+    replacement and never land in the padding.
+    """
+    key = jax.random.fold_in(jax.random.fold_in(data_key, t), client_id)
+    u = jax.random.uniform(key, (local_iters, batch_size))
+    n = jnp.maximum(length, 1).astype(jnp.float32)
+    idx = jnp.floor(u * n).astype(jnp.int32)
+    return jnp.minimum(idx, (n - 1.0).astype(jnp.int32))
+
+
+def round_indices_client_stream(data_key: jax.Array, t: jax.Array,
+                                lengths: jax.Array, local_iters: int,
+                                batch_size: int) -> jax.Array:
+    """Dense ``[K, L, B]`` reference of the per-client stream: row ``k`` is
+    exactly :func:`client_round_indices` for client ``k`` — gathering a
+    subset of rows equals sampling that subset directly (the sparse-path
+    parity tests rely on this)."""
+    K = lengths.shape[0]
+    ks = jnp.arange(K, dtype=jnp.int32)
+    return jax.vmap(lambda k, n: client_round_indices(
+        data_key, t, k, n, local_iters, batch_size))(ks, lengths)
+
+
+def sample_round_client_stream(store: DeviceDataStore, data_key: jax.Array,
+                               t: jax.Array, local_iters: int,
+                               batch_size: int):
+    """Dense-engine sampler on the per-client stream (``SimConfig.data_stream
+    = "client"``) — the bit-parity reference for the sparse path."""
+    return gather_round(store, round_indices_client_stream(
+        data_key, t, store.lengths, local_iters, batch_size))
+
+
+def gather_participant_rounds(store: DeviceDataStore, data_key: jax.Array,
+                              part_idx: jax.Array, local_iters: int,
+                              batch_size: int):
+    """Batches for the transmitting sets of every round, participant-sized.
+
+    ``part_idx: [T, P]`` int32 client ids (padding rows hold ``K``).  Returns
+    ``([T, P, L, B, ...], [T, P, L, B])`` — the only contact with the dense
+    ``[K, N_max, ...]`` store is a row gather per participant; no
+    ``[K, L, B, ...]`` round batch is ever built.  Padding entries gather
+    client ``K-1``'s rows (clamped) on a never-used key stream; the sparse
+    engine masks them out of the aggregate.
+    """
+    K = store.num_clients
+
+    def one_round(t, idx_t):
+        kc = jnp.clip(idx_t, 0, K - 1)
+        lens = store.lengths[kc]
+        bidx = jax.vmap(lambda k_raw, n: client_round_indices(
+            data_key, t, k_raw, n, local_iters, batch_size))(idx_t, lens)
+        xb = jax.vmap(lambda k, ii: store.x[k][ii])(kc, bidx)
+        yb = jax.vmap(lambda k, ii: store.y[k][ii])(kc, bidx)
+        return xb, yb
+
+    T = part_idx.shape[0]
+    ts = jnp.arange(T, dtype=jnp.int32)
+    return jax.vmap(one_round)(ts, part_idx)
+
+
 def stack_rounds_reference(store: DeviceDataStore, data_key: jax.Array,
                            rounds: int, local_iters: int, batch_size: int):
     """Materialize the on-device stream into the legacy ``[T, K, L, B, ...]``
@@ -272,13 +347,29 @@ def _default_cap(assign: jax.Array, num_clients: int) -> int:
     """Concrete (host-side) capacity: the largest client's example count.
     Also the host entry's chance to reject degenerate partitions — a
     zero-example client would otherwise sample padding row 0 forever (see
-    :func:`round_indices`)."""
+    :func:`round_indices`).
+
+    Guarded for huge-K stores: with K ≫ N no partition can leave every
+    client non-empty, so the error fires *before* a ``[K]`` bincount is
+    materialized (at K ~ 10⁸ the bincount alone is hundreds of MB); the
+    capacity readback goes through Python ints, so downstream byte math
+    cannot silently overflow a fixed-width accumulator.
+    """
+    n = int(assign.shape[0])
+    if num_clients > n:
+        raise ValueError(
+            f"partition is degenerate: num_clients={num_clients} exceeds the "
+            f"dataset size N={n}, so some client must end up with no "
+            "examples — use a larger dataset or fewer clients")
     counts = jnp.bincount(assign, length=num_clients)
     if int(counts.min()) == 0:
         raise ValueError(
             f"partition left client {int(jnp.argmin(counts))} with no "
             "examples — use a larger alpha/dataset or fewer clients")
-    return int(counts.max())
+    cap = int(counts.max())
+    if cap <= 0:
+        raise ValueError("partition produced a degenerate zero capacity")
+    return cap
 
 
 def dirichlet_store(key: jax.Array, ds: Dataset, num_clients: int,
@@ -315,13 +406,31 @@ DEFAULT_BUDGET_BYTES = 4 << 30
 STORE_BUDGET_FRACTION = 0.5
 
 
+def store_bytes(num_clients: int, cap: int, sample_shape: Sequence[int],
+                itemsize: int = 4) -> int:
+    """Exact padded-store footprint from its shape parameters.
+
+    Matches :attr:`DeviceDataStore.nbytes` term for term: the ``[K, N_max,
+    ...]`` inputs, the ``[K, N_max]`` int32 label/mask block, and the ``[K]``
+    int32 lengths vector.  All math is Python-int, so a K ~ 10⁹ planning
+    query cannot overflow a fixed-width accumulator the way ``np.int64``
+    products silently can.
+    """
+    row = 1
+    for s in sample_shape:
+        row *= int(s)
+    k, cap = int(num_clients), int(cap)
+    return k * cap * (row * int(itemsize) + 4) + k * 4
+
+
 def estimate_store_bytes(clients: Sequence[Dataset]) -> int:
-    """Padded-store footprint for a client list, without building it."""
+    """Padded-store footprint for a client list, without building it
+    (exactly what :func:`from_client_datasets` would allocate, including the
+    ``[K, N_max]`` label/mask block and the ``[K]`` lengths vector)."""
     counts = [int(np.asarray(c.y).shape[0]) for c in clients]
-    cap = max(counts)
     sample = np.asarray(clients[0].x)
-    per_row = int(np.prod(sample.shape[1:])) * sample.dtype.itemsize + 4
-    return len(clients) * cap * per_row
+    return store_bytes(len(clients), max(counts), sample.shape[1:],
+                       sample.dtype.itemsize)
 
 
 def device_memory_budget() -> int:

@@ -5,8 +5,12 @@ from .engine import (MatrixResult, RoundTrace, SimConfig, SimResult,
                      run_seed_matrix, run_simulation_scan,
                      stack_round_batches)
 from .simulator import run_simulation, run_simulation_legacy
+from .sparse import (ParticipationTrace, build_participation_program,
+                     build_sparse_train_program, make_sparse_runner,
+                     resolve_participation, train_trace_count)
 from .state import (FLState, init_fl_state, masked_aggregate,
-                    pseudo_gradients, broadcast_to_participants)
+                    pseudo_gradients, subset_aggregate,
+                    broadcast_to_participants)
 
 __all__ = ["SimConfig", "SimResult", "run_simulation",
            "run_simulation_legacy", "run_simulation_scan", "build_scan_sim",
@@ -14,4 +18,7 @@ __all__ = ["SimConfig", "SimResult", "run_simulation",
            "run_seed_matrix", "run_scenario_matrix", "stack_round_batches",
            "grant_forced_bandwidth", "MatrixResult", "RoundTrace", "FLState",
            "init_fl_state", "masked_aggregate", "pseudo_gradients",
-           "broadcast_to_participants"]
+           "subset_aggregate", "broadcast_to_participants",
+           "make_sparse_runner", "resolve_participation",
+           "build_participation_program", "build_sparse_train_program",
+           "ParticipationTrace", "train_trace_count"]

@@ -40,7 +40,7 @@ from ..core.channel import CellConfig, rate_nats
 from ..core.selection import PolicyFn, as_policy_fn, online_policy
 from ..data.device import (StreamingSampler, choose_data_path,
                            data_stream_key, from_client_datasets,
-                           sample_round)
+                           sample_round, sample_round_client_stream)
 from ..data.pipeline import BatchIterator, client_batches
 from ..data.synthetic import Dataset
 from ..optim import Optimizer, sgd
@@ -68,6 +68,23 @@ class SimConfig:
     # legacy [T, K, L, B] pre-stack, kept as the parity/benchmark reference.
     data_path: str = "auto"
     stream_chunk: int = 256            # rounds per streamed chunk
+    # local-training semantics: "continuous" (paper default — every client
+    # runs local SGD every round, cost irreducibly O(K·T)) or "participants"
+    # (only the transmitting set trains, from its last received global — the
+    # sampled-FedAvg reading; what the sparse path accelerates).
+    local_mode: str = "continuous"
+    # round execution: "dense" ([K]-shaped round transition), "sparse"
+    # (participant-centric two-phase path, see repro.fl.sparse), or "auto"
+    # (sparse exactly when its preconditions hold — participants local mode,
+    # state_free policy, device data path, per-client stream).
+    participation: str = "dense"
+    participant_bucket: int | None = None  # static padded transmitting-set
+                                           # size (None = auto from E[Σp])
+    # minibatch index stream: "round" draws one [K, L, B] block per round
+    # from fold_in(data_key, t); "client" keys each client's draw separately
+    # (fold_in(fold_in(data_key, t), k)) so a participant's batch can be
+    # sampled without touching the other K-1 clients (sparse path needs it).
+    data_stream: str = "round"
 
 
 class SimResult(NamedTuple):
@@ -240,6 +257,13 @@ def resolve_data_path(client_data: Sequence[Dataset], cfg: SimConfig,
     if path not in ("prestack", "device", "stream"):
         raise ValueError(f"unknown data_path {path!r} "
                          "(expected auto|prestack|device|stream)")
+    if cfg.data_stream not in ("round", "client"):
+        raise ValueError(f"unknown data_stream {cfg.data_stream!r} "
+                         "(expected round|client)")
+    if cfg.data_stream == "client" and path != "device":
+        raise ValueError(
+            "the per-client minibatch stream is defined on the device data "
+            f"path only (resolved path: {path!r}); pass data_path='device'")
     return path
 
 
@@ -277,8 +301,20 @@ def _make_round_step(vtrain: Callable, loss_fn: Callable, acc_fn: Callable,
         mask, forced, w, e_round = apply_round_decision(
             probs, w, t, h_t, state, base_key, cfg, cell, K)
         energy = energy + e_round
-        # --- Step 1 (continuous local training) + Steps 4-5 ----------------
+        # --- Step 1 (local training) + Steps 4-5 ---------------------------
         client = vtrain(state.client_params, xb, yb)
+        if cfg.local_mode == "participants":
+            # only the transmitting set moves; non-participants keep
+            # client == anchor (their pseudo-gradient stays exactly zero)
+            def keep(new, old):
+                m = mask.reshape((-1,) + (1,) * (new.ndim - 1)).astype(bool)
+                return jnp.where(m, new, old)
+
+            client = jax.tree_util.tree_map(keep, client,
+                                            state.client_params)
+        elif cfg.local_mode != "continuous":
+            raise ValueError(f"unknown local_mode {cfg.local_mode!r} "
+                             "(expected continuous|participants)")
         state = state._replace(client_params=client)
         deltas = pseudo_gradients(state)
         new_global = masked_aggregate(state.global_params, deltas, mask, K)
@@ -387,10 +423,13 @@ def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
             ts_all = jnp.arange(cfg.rounds, dtype=jnp.int32)
             pw_all = _resolve_pw(h_rounds, pw_all)
 
+            sample = (sample_round_client_stream
+                      if cfg.data_stream == "client" else sample_round)
+
             def step(carry, xs):
                 t, h_t, pw = xs
-                xb, yb = sample_round(store, data_key, t, cfg.local_iters,
-                                      cfg.batch_size)
+                xb, yb = sample(store, data_key, t, cfg.local_iters,
+                                cfg.batch_size)
                 return round_step(carry, t, h_t, xb, yb, pw, base_key,
                                   test_x, test_y)
 
@@ -519,11 +558,19 @@ def make_runner(loss_fn: Callable, acc_fn: Callable,
     client-axis sharding is active.
     """
     K = len(client_data)
-    opt = opt or sgd(cfg.lr)
     policy_fn = as_policy_fn(policy)
     test_x = test_ds.x[: cfg.eval_batch]
     test_y = test_ds.y[: cfg.eval_batch]
     path = resolve_data_path(client_data, cfg, data_path, data_budget_bytes)
+
+    from .sparse import make_sparse_runner, resolve_participation
+    if resolve_participation(cfg, policy_fn, path, K) == "sparse":
+        # opt passed un-defaulted: the sparse runner tokens the default
+        # optimizer by (kind, lr) so its participant-program cache hits
+        # across runners (a fresh sgd() closure per call would miss on id)
+        return make_sparse_runner(loss_fn, acc_fn, client_data, test_ds,
+                                  policy_fn, cell, cfg, opt=opt)
+    opt = opt or sgd(cfg.lr)
 
     if path == "stream":
         return _make_stream_runner(loss_fn, acc_fn, client_data, test_x,

@@ -27,7 +27,8 @@ import numpy as np
 from ..core.channel import CellConfig
 from ..core.selection import Policy, as_policy_fn
 from ..data.device import (StreamingSampler, data_stream_key,
-                           from_client_datasets, sample_round)
+                           from_client_datasets, sample_round,
+                           sample_round_client_stream)
 from ..data.pipeline import BatchIterator, client_batches
 from ..data.synthetic import Dataset
 from ..optim import Optimizer, sgd
@@ -42,7 +43,7 @@ __all__ = ["SimConfig", "SimResult", "run_simulation",
 
 
 def make_round_fn(loss_fn: Callable, opt: Optimizer, local_iters: int,
-                  num_clients: int):
+                  num_clients: int, local_mode: str = "continuous"):
     """Build the jitted per-round transition over stacked client states."""
     vtrain = make_local_train(loss_fn, opt)
 
@@ -50,6 +51,13 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, local_iters: int,
     def fl_round(state: FLState, mask: jax.Array, xb: jax.Array,
                  yb: jax.Array) -> FLState:
         client = vtrain(state.client_params, xb, yb)
+        if local_mode == "participants":
+            def keep(new, old):
+                m = mask.reshape((-1,) + (1,) * (new.ndim - 1)).astype(bool)
+                return jnp.where(m, new, old)
+
+            client = jax.tree_util.tree_map(keep, client,
+                                            state.client_params)
         state = state._replace(client_params=client)
         deltas = pseudo_gradients(state)
         new_global = masked_aggregate(state.global_params, deltas, mask,
@@ -100,7 +108,8 @@ def run_simulation_legacy(init_params: Any,
     opt = opt or sgd(cfg.lr)
     policy_fn = as_policy_fn(policy)
     state = init_fl_state(init_params, K)
-    round_fn = make_round_fn(loss_fn, opt, cfg.local_iters, K)
+    round_fn = make_round_fn(loss_fn, opt, cfg.local_iters, K,
+                             local_mode=cfg.local_mode)
     base_key = jax.random.PRNGKey(cfg.seed)
 
     decide = jax.jit(lambda t, h_t, st: round_decision(
@@ -113,7 +122,9 @@ def run_simulation_legacy(init_params: Any,
                  for k, ds in enumerate(client_data)]
     elif data_path == "device":  # per-round jitted draw from the store
         store = from_client_datasets(client_data)
-        sample = jax.jit(lambda t: sample_round(
+        draw = (sample_round_client_stream if cfg.data_stream == "client"
+                else sample_round)
+        sample = jax.jit(lambda t: draw(
             store, data_key, t, cfg.local_iters, cfg.batch_size))
     else:  # stream: data stays host-side (it was chosen because the store
         # does not fit on device); same index stream, one-round chunks

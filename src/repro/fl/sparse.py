@@ -1,0 +1,357 @@
+"""Participant-centric sparse rounds: per-participant cost at any population.
+
+The dense scan engine (:mod:`repro.fl.engine`) carries every per-round
+structure at population width ``[K]`` — client batch gather, local training,
+``[K, D]`` deltas — so simulation cost scales with the population even though
+only ~pK clients transmit per round.  This module restructures the round
+transition so the expensive work scales with the *transmitting set*:
+
+* **Phase A — participation program** (``build_participation_program``):
+  a tiny jitted scan over ``[K]`` *vectors only* (probabilities, Bernoulli
+  draws, Δ_k staleness dynamics, the eq.-5 energy ledger).  It shares
+  :func:`~repro.fl.engine.apply_round_decision` with the dense engine, so
+  masks and energies are bit-identical; its outputs are *participant-sized*:
+  the transmitting index set per round (padded to a static bucket), each
+  participant's anchor slot, and its energy.  Compiled per K, but the
+  program is a few K-length vector ops per round — microseconds, not the
+  K·D local-training cost.
+* **Batch gather** (:func:`repro.data.device.gather_participant_rounds`):
+  participants' minibatches come from the per-client stream
+  ``fold_in(fold_in(data_key, t), k)``, so only ``[T, P, L, B, ...]`` is
+  ever gathered from the resident store — no ``[K, L, B, ...]`` round batch
+  exists anywhere.
+* **Phase B — training program** (``build_sparse_train_program``): a jitted
+  scan whose shapes depend only on ``(bucket, T, model)`` — **never on K**.
+  The carry is a global-model *history* ``[T+1, D]`` (slot s = the model
+  broadcast after round s-1); each round gathers its participants' anchors
+  ``hist[slot_p]``, runs local SGD over the ``[P, ...]`` bucket, and applies
+  the participant-subset eq.-3 update (:func:`repro.fl.state.subset_aggregate`,
+  Pallas-fused on TPU) with the population size as a *traced* scalar.  One
+  compile serves every K sharing a bucket — the fix for the engine's
+  one-compile-per-K limitation (``TRAIN_TRACE_COUNT`` counts traces; the
+  K-sweep test pins it to one).
+
+Semantics: the sparse path implements ``SimConfig.local_mode =
+"participants"`` — a client trains ``local_iters`` steps from its last
+received global *in the round it transmits* (the standard sampled-FedAvg
+reading of the paper's protocol).  The dense engine supports the same mode,
+and the two are parity-tested against each other; the paper's default
+``"continuous"`` mode (every client trains every round) is irreducibly
+O(K·T) compute and keeps the dense path.
+
+Memory: phase B replaces the dense ``[K, D]`` client/anchor stacks with the
+``[T+1, D]`` history — a win whenever K ≫ T.  The dense ``[K]`` ledgers
+(energy, last_tx) survive in phase A and shard over a mesh via
+``launch.sharding.ledger_shardings``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.channel import CellConfig
+from ..core.selection import (as_policy_fn, participant_bucket,
+                              participants_from_mask)
+from ..data.device import (DeviceDataStore, data_stream_key,
+                           from_client_datasets, gather_participant_rounds)
+from ..data.synthetic import Dataset
+from ..optim import Optimizer, sgd
+from .state import FLState, subset_aggregate
+
+#: number of times the participant-shaped training program has been traced.
+#: Shapes depend only on (bucket, T, model), so a K-sweep sharing a bucket
+#: must not bump this more than once (tests/test_sparse_engine.py).
+TRAIN_TRACE_COUNT = 0
+
+
+def train_trace_count() -> int:
+    return TRAIN_TRACE_COUNT
+
+
+class _DecisionView(NamedTuple):
+    """The two FLState fields :func:`apply_round_decision` actually reads —
+    phase A never materializes client/anchor parameter stacks."""
+
+    round: jax.Array    # int32 scalar
+    last_tx: jax.Array  # [K] int32
+
+
+class ParticipationTrace(NamedTuple):
+    """Phase A per-round outputs (leading axis T after the scan) — all
+    participant-sized except the scalar overflow counter."""
+
+    part_idx: jax.Array     # [P] int32 transmitting ids, padded with K
+    valid: jax.Array        # [P] bool
+    anchor_slot: jax.Array  # [P] int32 history slot of each anchor
+    e_p: jax.Array          # [P] f32 Joules (eq. 5)
+    n_tx: jax.Array         # int32 realized transmitter count (overflow check)
+
+
+def build_participation_program(policy_fn, cfg, cell: CellConfig,
+                                num_clients: int, bucket: int) -> Callable:
+    """Phase A: ``(h_rounds [T, K], base_key) -> (last_tx [K], energy [K],
+    ParticipationTrace[T])``.
+
+    Pure ``[K]``-vector work per round; the policy must be ``state_free``
+    (all five paper schemes are) because phase A runs before any training.
+    Decision math is byte-for-byte the dense engine's
+    ``apply_round_decision`` on the identical ``fold_in(base_key, t)``
+    stream, so realized masks and the energy ledger match the dense scan
+    bit-wise.
+    """
+    from .engine import apply_round_decision  # deferred: engine imports us
+
+    if not getattr(policy_fn, "state_free", False):
+        raise ValueError(
+            "sparse participation requires a state_free policy (it decides "
+            "the whole horizon before training); policies reading the "
+            "simulation state must use the dense engine")
+    K = num_clients
+
+    def program(h_rounds, base_key):
+        ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
+        pw_all = jax.vmap(lambda t, h: policy_fn(t, h, None))(ts, h_rounds)
+
+        def step(carry, xs):
+            last_tx, anchor_slot, energy = carry
+            t, h_t, probs, w = xs
+            view = _DecisionView(round=t, last_tx=last_tx)
+            mask, forced, w, e_round = apply_round_decision(
+                probs, w, t, h_t, view, base_key, cfg, cell, K)
+            energy = energy + e_round
+            idx, valid, n_tx = participants_from_mask(mask, bucket)
+            kc = jnp.clip(idx, 0, K - 1)
+            slot_p = jnp.where(valid, anchor_slot[kc], 0)
+            e_p = jnp.where(valid, e_round[kc], 0.0)
+            last_tx = jnp.where(mask > 0, t, last_tx)
+            anchor_slot = jnp.where(mask > 0, t + 1, anchor_slot)
+            return ((last_tx, anchor_slot, energy),
+                    ParticipationTrace(idx, valid, slot_p, e_p, n_tx))
+
+        carry0 = (jnp.zeros((K,), jnp.int32), jnp.zeros((K,), jnp.int32),
+                  jnp.zeros((K,), jnp.float32))
+        (last_tx, _, energy), tr = jax.lax.scan(
+            step, carry0, (ts, h_rounds, pw_all[0], pw_all[1]))
+        return last_tx, energy, tr
+
+    return program
+
+
+# ---------------------------------------------------------------------------
+# phase B: the K-independent participant training program
+# ---------------------------------------------------------------------------
+
+#: (bucket, T, model/cfg signature) -> jitted training program.  One compile
+#: per bucket — populations of any size reuse the entry.
+_TRAIN_CACHE: dict = {}
+
+
+def _train_cache_key(cfg, opt_token, loss_fn, acc_fn, params, sample_shape,
+                     test_shape, bucket: int):
+    shapes = tuple((tuple(l.shape), str(l.dtype))
+                   for l in jax.tree_util.tree_leaves(params))
+    treedef = str(jax.tree_util.tree_structure(params))
+    return (bucket, cfg.rounds, cfg.local_iters, cfg.batch_size,
+            cfg.eval_every, opt_token, id(loss_fn), id(acc_fn), treedef,
+            shapes, tuple(sample_shape), tuple(test_shape))
+
+
+def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
+                               opt: Optimizer, cfg) -> Callable:
+    """Phase B: ``(params, xb [T,P,L,B,...], yb, valid [T,P], slot [T,P],
+    num_clients, test_x, test_y) -> (global, (acc, loss, did_eval)[T])``.
+
+    No array in this program carries a K-sized axis: the carry is the
+    global-model history ``[T+1, D]``, training runs over the ``[P, ...]``
+    bucket, and the 1/K averaging receives the population as a traced
+    scalar.  Tracing it bumps :data:`TRAIN_TRACE_COUNT`.
+    """
+    from .engine import make_local_train  # deferred: engine imports us
+
+    vtrain = make_local_train(loss_fn, opt)
+    T = cfg.rounds
+
+    def program(params, xb_all, yb_all, valid_all, slot_all, num_clients,
+                test_x, test_y):
+        global TRAIN_TRACE_COUNT
+        TRAIN_TRACE_COUNT += 1
+        hist0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((T + 1,) + p.shape, p.dtype).at[0].set(p),
+            params)
+
+        def eval_now(p):
+            return (jnp.asarray(acc_fn(p, test_x, test_y), jnp.float32),
+                    jnp.asarray(loss_fn(p, test_x, test_y), jnp.float32))
+
+        def skip_eval(p):
+            del p
+            return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+
+        def step(hist, xs):
+            t, xb, yb, valid, slot = xs
+            g_t = jax.tree_util.tree_map(lambda h: h[t], hist)
+            anchors = jax.tree_util.tree_map(lambda h: h[slot], hist)
+            trained = vtrain(anchors, xb, yb)
+            deltas = jax.tree_util.tree_map(lambda a, b: a - b, trained,
+                                            anchors)
+            g_new = subset_aggregate(g_t, deltas, valid, num_clients)
+            hist = jax.tree_util.tree_map(
+                lambda h, g: h.at[t + 1].set(g), hist, g_new)
+            do_eval = jnp.logical_or(t % cfg.eval_every == 0, t == T - 1)
+            acc, loss = jax.lax.cond(do_eval, eval_now, skip_eval, g_new)
+            return hist, (acc, loss, do_eval)
+
+        ts = jnp.arange(T, dtype=jnp.int32)
+        hist, traces = jax.lax.scan(
+            step, hist0, (ts, xb_all, yb_all, valid_all, slot_all))
+        g_final = jax.tree_util.tree_map(lambda h: h[T], hist)
+        return g_final, traces
+
+    return program
+
+
+def _cached_train_program(key, builder: Callable) -> Callable:
+    if key not in _TRAIN_CACHE:
+        _TRAIN_CACHE[key] = jax.jit(builder())
+    return _TRAIN_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# runner: phase A -> participant gather -> phase B -> SimResult
+# ---------------------------------------------------------------------------
+
+
+def _auto_bucket(policy_fn, h_rounds, cfg, num_clients: int) -> int:
+    """Bucket from the expected transmitting mass: max over rounds of Σp,
+    with Poisson-tail headroom (see :func:`participant_bucket`)."""
+    ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
+    probs = jax.jit(jax.vmap(lambda t, h: policy_fn(t, h, None)[0]))(
+        ts, h_rounds)
+    expected = float(jnp.max(jnp.sum(probs, axis=-1)))
+    return participant_bucket(expected, cap=num_clients)
+
+
+def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
+                       client_data: Sequence[Dataset], test_ds: Dataset,
+                       policy, cell: CellConfig, cfg,
+                       opt: Optimizer | None = None) -> Callable:
+    """Participant-centric counterpart of ``engine.make_runner``.
+
+    Returns ``runner(params, h_all, seed=None) -> SimResult`` with the same
+    result contract as the dense engine (dense ``[T, K]`` participation /
+    per-round energy are reconstructed host-side from the participant trace;
+    ``result.state`` carries the final global model and ``last_tx`` but no
+    ``[K, D]`` client stacks — the sparse path never materializes them).
+    """
+    from .engine import SimResult  # deferred: engine imports us
+
+    # a pre-built store is accepted directly — at mega-populations a
+    # million-element Dataset list is not viable, and the jittable
+    # partitioners emit stores natively
+    store = (client_data if isinstance(client_data, DeviceDataStore)
+             else from_client_datasets(client_data))
+    K = store.num_clients
+    if opt is None:
+        # value-token the default optimizer: every runner constructing the
+        # default sgd(cfg.lr) shares one cache entry (fresh closures would
+        # make the id()-based token miss on every make_runner call)
+        opt = sgd(cfg.lr)
+        opt_token = ("default-sgd", float(cfg.lr))
+    else:
+        opt_token = (id(opt.init), id(opt.update))
+    policy_fn = as_policy_fn(policy)
+    if cfg.local_mode != "participants":
+        raise ValueError(
+            "the sparse path implements local_mode='participants'; "
+            "continuous local training is population-shaped by definition — "
+            "use the dense engine for it")
+    if cfg.data_stream != "client":
+        raise ValueError(
+            "sparse participation samples minibatches per participant and "
+            "needs the per-client stream: set SimConfig(data_stream='client')")
+    data_key = data_stream_key(cfg.seed)
+    test_x = test_ds.x[: cfg.eval_batch]
+    test_y = test_ds.y[: cfg.eval_batch]
+    T = cfg.rounds
+    phase_a: dict = {}
+    gather = jax.jit(lambda pidx: gather_participant_rounds(
+        store, data_key, pidx, cfg.local_iters, cfg.batch_size))
+
+    def runner(params, h_all, seed: int | None = None) -> SimResult:
+        key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+        h_rounds = jnp.swapaxes(h_all, 0, 1)
+        bucket = cfg.participant_bucket or _auto_bucket(policy_fn, h_rounds,
+                                                        cfg, K)
+        if bucket not in phase_a:
+            phase_a[bucket] = jax.jit(build_participation_program(
+                policy_fn, cfg, cell, K, bucket))
+        last_tx, energy, ptr = phase_a[bucket](h_rounds, key)
+        n_tx = np.asarray(ptr.n_tx)
+        if (n_tx > bucket).any():
+            raise RuntimeError(
+                f"participant bucket overflow: round {int(n_tx.argmax())} "
+                f"realized {int(n_tx.max())} transmitters > bucket {bucket} "
+                "— pass SimConfig(participant_bucket=...) with more headroom")
+        xb_all, yb_all = gather(ptr.part_idx)
+        train = _cached_train_program(
+            _train_cache_key(cfg, opt_token, loss_fn, acc_fn, params,
+                             store.x.shape[2:], test_x.shape, bucket),
+            lambda: build_sparse_train_program(loss_fn, acc_fn, opt, cfg))
+        g_final, (accs, losses, dids) = train(
+            params, xb_all, yb_all, ptr.valid, ptr.anchor_slot,
+            jnp.int32(K), test_x, test_y)
+
+        # host-side densification of the participant trace (numpy, O(T·K))
+        idx = np.asarray(ptr.part_idx)
+        val = np.asarray(ptr.valid)
+        e_p = np.asarray(ptr.e_p)
+        t_of = np.broadcast_to(np.arange(T)[:, None], idx.shape)
+        parts = np.zeros((T, K), np.float32)
+        e_round = np.zeros((T, K), np.float32)
+        parts[t_of[val], idx[val]] = 1.0
+        e_round[t_of[val], idx[val]] = e_p[val]
+        did = np.asarray(dids)
+        ev = np.where(did)[0]
+        state = FLState(global_params=g_final, client_params=None,
+                        anchor_params=None, round=jnp.int32(T),
+                        last_tx=last_tx)
+        return SimResult(
+            test_acc=np.asarray(accs)[ev],
+            test_loss=np.asarray(losses)[ev],
+            eval_rounds=ev,
+            energy_per_client=np.asarray(energy),
+            energy_timeline=np.cumsum(e_round.sum(axis=1)),
+            participation=parts,
+            state=state,
+        )
+
+    runner.store = store
+    return runner
+
+
+def resolve_participation(cfg, policy_fn, data_path: str,
+                          num_clients: int) -> str:
+    """Resolve ``cfg.participation`` to ``"dense"`` or ``"sparse"``.
+
+    ``"auto"`` picks sparse exactly when its preconditions hold — the
+    participants-only local mode, a state_free policy, the device data path,
+    and the per-client minibatch stream; anything else keeps the dense scan.
+    ``"sparse"`` raises on unmet preconditions instead of silently changing
+    semantics.
+    """
+    mode = cfg.participation
+    if mode not in ("dense", "sparse", "auto"):
+        raise ValueError(f"unknown participation {mode!r} "
+                         "(expected dense|sparse|auto)")
+    state_free = getattr(policy_fn, "state_free", False)
+    ok = (cfg.local_mode == "participants" and state_free
+          and data_path == "device" and cfg.data_stream == "client")
+    if mode == "auto":
+        return "sparse" if ok else "dense"
+    if mode == "sparse" and data_path != "device":
+        raise ValueError("sparse participation gathers from the device "
+                         f"store; data path {data_path!r} is not supported")
+    return mode

@@ -74,6 +74,40 @@ def masked_aggregate(global_params: Any, deltas: Any, mask: jax.Array,
     return jax.tree_util.tree_map(agg, global_params, deltas)
 
 
+def subset_aggregate(global_params: Any, deltas_p: Any, valid: jax.Array,
+                     num_clients, use_pallas: bool | None = None) -> Any:
+    """Participant-subset eq. (3): x ← x + (1/K) Σ_p valid_p · δ_p.
+
+    ``deltas_p`` carries a leading *participant bucket* axis P (the gathered
+    transmitting set, padded), not the population axis K; ``valid`` masks the
+    padding lanes and ``num_clients`` is the population size the paper's
+    1/K averaging divides by — it may be a **traced** scalar, which is what
+    lets one compiled sparse round step serve every population sharing a
+    bucket.  Backend dispatch matches :func:`masked_aggregate`: the fused
+    Pallas kernel on TPU (subset form — see ``kernels.ops.fl_aggregate_subset``),
+    the jnp oracle elsewhere.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    kf = jnp.asarray(num_clients, jnp.float32)
+    if use_pallas:
+        from ..kernels import ops
+
+        def agg_k(g, d):
+            out = ops.fl_aggregate_subset(
+                g.reshape(-1), d.reshape(d.shape[0], -1),
+                valid.astype(jnp.float32), kf, use_pallas=True)
+            return out.reshape(g.shape).astype(g.dtype)
+
+        return jax.tree_util.tree_map(agg_k, global_params, deltas_p)
+
+    def agg(g, d):
+        m = valid.astype(d.dtype).reshape((-1,) + (1,) * (d.ndim - 1))
+        return g + jnp.sum(d * m, axis=0) / kf
+
+    return jax.tree_util.tree_map(agg, global_params, deltas_p)
+
+
 def broadcast_to_participants(state: FLState, new_global: Any,
                               mask: jax.Array) -> FLState:
     """Protocol Step 5: participants receive x_t (both x_k and y_k reset)."""

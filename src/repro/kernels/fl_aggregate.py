@@ -32,30 +32,40 @@ def _kernel(mask_ref, global_ref, deltas_ref, out_ref, *, inv_k: float):
                     + agg).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "denom"))
 def fl_aggregate(global_p: jax.Array, deltas: jax.Array, mask: jax.Array,
-                 interpret: bool = True) -> jax.Array:
-    """global_p: [M]; deltas: [K, M]; mask: [K] → updated global [M].
+                 interpret: bool = True,
+                 denom: int | None = None) -> jax.Array:
+    """global_p: [M]; deltas: [R, M]; mask: [R] → updated global [M].
+
+    ``R`` is the *row* count of the delta block — the full population K in
+    the dense path, or a padded participant bucket P in the sparse path.
+    ``denom`` is the eq.-3 averaging denominator (the population size K);
+    it defaults to ``R``, which is only correct when the rows ARE the whole
+    population.  The sparse path passes ``deltas: [P, M]`` for the gathered
+    transmitting set with ``mask`` = its validity lanes and ``denom=K``, so
+    one compiled kernel shape serves every population size sharing a bucket.
 
     M is padded to a (BLOCK_R·128) multiple internally.
     """
-    K, M = deltas.shape
+    R, M = deltas.shape
+    inv_k = 1.0 / (R if denom is None else int(denom))
     tile = BLOCK_R * LANE
     Mp = (M + tile - 1) // tile * tile
     gp = jnp.pad(global_p, (0, Mp - M)).reshape(Mp // LANE, LANE)
-    dp = jnp.pad(deltas, ((0, 0), (0, Mp - M))).reshape(K, Mp // LANE, LANE)
+    dp = jnp.pad(deltas, ((0, 0), (0, Mp - M))).reshape(R, Mp // LANE, LANE)
     grid = (Mp // tile,)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, inv_k=1.0 / K),
+        functools.partial(_kernel, inv_k=inv_k),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((R, 1), lambda i: (0, 0)),
             pl.BlockSpec((BLOCK_R, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((K, BLOCK_R, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((R, BLOCK_R, LANE), lambda i: (0, i, 0)),
         ],
         out_specs=pl.BlockSpec((BLOCK_R, LANE), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Mp // LANE, LANE), global_p.dtype),
         interpret=interpret,
-    )(mask.reshape(K, 1), gp, dp)
+    )(mask.reshape(R, 1), gp, dp)
     return out.reshape(Mp)[:M]

@@ -28,6 +28,21 @@ def fl_aggregate(global_p, deltas, mask, use_pallas: bool | None = None):
     return ref.fl_aggregate_ref(global_p, deltas, mask)
 
 
+def fl_aggregate_subset(global_p, deltas, valid, num_clients,
+                        use_pallas: bool | None = None):
+    """Participant-subset eq. (3): deltas [P, M] + validity lanes, averaged
+    over the *population* ``num_clients`` (may be traced — it is folded into
+    the mask so the Pallas kernel shape depends only on the bucket P)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        import jax.numpy as jnp
+        scaled = (valid.astype(jnp.float32)
+                  / jnp.asarray(num_clients, jnp.float32))
+        return _fl_aggregate_pallas(global_p, deltas, scaled,
+                                    interpret=not _on_tpu(), denom=1)
+    return ref.fl_aggregate_subset_ref(global_p, deltas, valid, num_clients)
+
+
 def flash_attention(q, k, v, causal=True, window=None,
                     use_pallas: bool | None = None):
     use = _on_tpu() if use_pallas is None else use_pallas

@@ -17,6 +17,20 @@ def fl_aggregate_ref(global_p: jax.Array, deltas: jax.Array,
     return (global_p.astype(jnp.float32) + agg).astype(global_p.dtype)
 
 
+def fl_aggregate_subset_ref(global_p: jax.Array, deltas: jax.Array,
+                            valid: jax.Array, num_clients) -> jax.Array:
+    """Participant-subset eq. (3): out = global + (1/K) Σ_p valid_p · δ_p.
+
+    global_p: [M]; deltas: [P, M] (gathered transmitting set, padded);
+    valid: [P] lanes; ``num_clients`` is the population K — may be a traced
+    scalar, so one compiled program serves every K sharing a bucket.
+    """
+    agg = jnp.sum(deltas.astype(jnp.float32)
+                  * valid.astype(jnp.float32)[:, None], axis=0)
+    agg = agg / jnp.asarray(num_clients, jnp.float32)
+    return (global_p.astype(jnp.float32) + agg).astype(global_p.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True,
                         window: int | None = None) -> jax.Array:

@@ -266,5 +266,16 @@ def client_axis_shardings(tree: Any, mesh, axis: str) -> Any:
     return jax.tree_util.tree_map(one, tree)
 
 
+def ledger_shardings(tree: Any, mesh, axis: str = "k") -> Any:
+    """Shardings for the population-sized ``[K]`` ledgers that survive in
+    the sparse engine's phase A (cumulative energy, ``last_tx``, anchor
+    slots, per-round probability rows).  The participant training program
+    is K-independent, so these vectors are the *only* K-sized state left;
+    at mega-populations they shard over the client mesh axis exactly like
+    the dense store's client axis (same rule set — divisibility-guarded
+    leading-dim sharding, scalars replicate)."""
+    return client_axis_shardings(tree, mesh, axis)
+
+
 def replicated(mesh):
     return NamedSharding(mesh, P())

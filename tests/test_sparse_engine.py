@@ -1,0 +1,345 @@
+"""Participant-centric sparse rounds: bit-parity with the dense engine in
+participants mode, one compile per participant bucket across a K-sweep, the
+no-population-sized-buffer guarantee of the training program, overflow
+handling, the per-client minibatch stream properties, and the huge-K store
+footprint math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_stub import given, settings, st
+from repro.core import CellConfig
+from repro.core.channel import channel_gains, sample_positions
+from repro.core.selection import (RandomScheme, participant_bucket,
+                                  participants_from_mask, random_policy)
+from repro.data import Dataset, make_mnist_like, shard_noniid
+from repro.data.device import (data_stream_key, estimate_store_bytes,
+                               from_client_datasets,
+                               gather_participant_rounds,
+                               round_indices_client_stream,
+                               sample_round_client_stream, store_bytes)
+from repro.fl import SimConfig, make_runner, run_simulation_legacy
+from repro.fl import sparse as sparse_mod
+from repro.fl.sparse import (build_sparse_train_program, resolve_participation)
+from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
+from repro.optim import sgd
+from test_device_store import _max_var_elems
+
+
+def mnist_world(K=8, rounds=10, dim=64):
+    tr, te = make_mnist_like(jax.random.PRNGKey(0), n_train=1200, n_test=300)
+    clients = shard_noniid(jax.random.PRNGKey(1), tr, K, d=5)
+    clients = [Dataset(c.x[:, :dim], c.y, c.num_classes) for c in clients]
+    te = Dataset(te.x[:, :dim], te.y, te.num_classes)
+    cell = CellConfig(num_clients=K)
+    pos = sample_positions(jax.random.PRNGKey(2), cell)
+    h = channel_gains(jax.random.PRNGKey(3), pos, rounds).T
+    params = init_mlp(jax.random.PRNGKey(4), dims=(dim, 24, 10))
+    return clients, te, cell, h, params
+
+
+def synth_world(K, rounds, dim=12, n_per=6, classes=10):
+    """K-scalable world: tiny fixed-size per-client shards, synthetic gains
+    (shapes stay small at K=1024 where mnist sharding would not)."""
+    kx, kh = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(kx, (K, n_per, dim))
+    y = jnp.tile(jnp.arange(n_per, dtype=jnp.int32) % classes, (K, 1))
+    clients = [Dataset(x[k], y[k], classes) for k in range(K)]
+    te = Dataset(x[:, 0, :][:64], y[:64, 0], classes)
+    cell = CellConfig(num_clients=K)
+    h = jax.random.uniform(kh, (K, rounds), minval=1e-14, maxval=1e-12)
+    params = init_mlp(jax.random.PRNGKey(4), dims=(dim, 8, classes))
+    return clients, te, cell, h, params
+
+
+SPARSE_KW = dict(local_mode="participants", data_path="device",
+                 data_stream="client")
+
+
+def run_pair(cfg_base: dict, policy, world, bucket=None):
+    """Dense participants-mode runner vs the sparse runner, same config."""
+    clients, te, cell, h, params = world
+    dense_cfg = SimConfig(**cfg_base, **SPARSE_KW)
+    sparse_cfg = SimConfig(**cfg_base, **SPARSE_KW, participation="sparse",
+                           participant_bucket=bucket)
+    dense = make_runner(mlp_loss, mlp_accuracy, clients, te, policy, cell,
+                        dense_cfg)(params, h)
+    sp = make_runner(mlp_loss, mlp_accuracy, clients, te, policy, cell,
+                     sparse_cfg)(params, h)
+    return dense, sp
+
+
+def assert_sparse_parity(dense, sp):
+    np.testing.assert_array_equal(dense.participation, sp.participation)
+    np.testing.assert_array_equal(dense.eval_rounds, sp.eval_rounds)
+    np.testing.assert_allclose(dense.energy_per_client, sp.energy_per_client,
+                               rtol=1e-6)
+    np.testing.assert_allclose(dense.energy_timeline, sp.energy_timeline,
+                               rtol=1e-6)
+    np.testing.assert_allclose(dense.test_acc, sp.test_acc, atol=1e-6)
+    np.testing.assert_allclose(dense.test_loss, sp.test_loss, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(dense.state.last_tx),
+                                  np.asarray(sp.state.last_tx))
+    for a, b in zip(jax.tree_util.tree_leaves(dense.state.global_params),
+                    jax.tree_util.tree_leaves(sp.state.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# --- sparse ↔ dense parity ---------------------------------------------------
+
+
+def test_sparse_matches_dense_bernoulli():
+    base = dict(rounds=10, local_iters=2, batch_size=8, eval_every=3,
+                eval_batch=200)
+    world = mnist_world(rounds=10)
+    dense, sp = run_pair(base, RandomScheme(p_bar=0.4, num_clients=8), world,
+                         bucket=8)
+    assert_sparse_parity(dense, sp)
+    # training actually moved the model (parity is not vacuous)
+    assert any(float(jnp.abs(a - b).max()) > 0 for a, b in zip(
+        jax.tree_util.tree_leaves(sp.state.global_params),
+        jax.tree_util.tree_leaves(world[4])))
+
+
+def test_sparse_matches_dense_with_staleness_forcing():
+    """Δ_k forced transmissions + aging boost flow through the phase-A
+    decision scan (stale anchors, forced-upload energy) identically."""
+    base = dict(rounds=12, local_iters=1, batch_size=8, eval_every=4,
+                eval_batch=200, max_staleness=3, aging_boost=True)
+    world = mnist_world(rounds=12)
+    dense, sp = run_pair(base, RandomScheme(p_bar=0.1, num_clients=8), world,
+                         bucket=8)
+    assert_sparse_parity(dense, sp)
+    assert sp.energy_per_client.min() > 0.0   # forcing populated the ledger
+
+
+def test_sparse_auto_bucket_and_legacy_loop_agree():
+    """participant_bucket=None resolves from the expected transmitting mass;
+    the legacy host loop in participants mode is a third bit-equal witness."""
+    base = dict(rounds=8, local_iters=2, batch_size=8, eval_every=3,
+                eval_batch=200)
+    world = mnist_world(rounds=8)
+    clients, te, cell, h, params = world
+    dense, sp = run_pair(base, RandomScheme(p_bar=0.4, num_clients=8), world,
+                         bucket=None)
+    assert_sparse_parity(dense, sp)
+    leg = run_simulation_legacy(params, mlp_loss, mlp_accuracy, clients, te,
+                                RandomScheme(p_bar=0.4, num_clients=8), h,
+                                cell, SimConfig(**base, **SPARSE_KW))
+    np.testing.assert_array_equal(sp.participation, leg.participation)
+    np.testing.assert_allclose(sp.test_acc, leg.test_acc, atol=1e-6)
+
+
+# --- dispatch / preconditions ------------------------------------------------
+
+
+def test_resolve_participation_auto_rules():
+    fn = random_policy(0.3, 4)
+    ok = SimConfig(**SPARSE_KW, participation="auto")
+    assert resolve_participation(ok, fn, "device", 4) == "sparse"
+    # any unmet precondition falls back to dense
+    for bad in (dict(local_mode="continuous"), dict(data_stream="round")):
+        cfg = SimConfig(**{**SPARSE_KW, **bad, "participation": "auto"})
+        assert resolve_participation(cfg, fn, "device", 4) == "dense"
+    assert resolve_participation(ok, fn, "prestack", 4) == "dense"
+
+    def stateful(t, h_t, state):
+        return jnp.zeros_like(h_t), jnp.zeros_like(h_t)
+
+    assert resolve_participation(ok, stateful, "device", 4) == "dense"
+
+
+def test_sparse_explicit_raises_on_bad_config():
+    world = mnist_world(rounds=4)
+    clients, te, cell, h, params = world
+    pol = RandomScheme(p_bar=0.4, num_clients=8)
+    with pytest.raises(ValueError, match="participants"):
+        make_runner(mlp_loss, mlp_accuracy, clients, te, pol, cell,
+                    SimConfig(rounds=4, data_path="device",
+                              data_stream="client", participation="sparse"))
+    with pytest.raises(ValueError, match="per-client stream"):
+        make_runner(mlp_loss, mlp_accuracy, clients, te, pol, cell,
+                    SimConfig(rounds=4, local_mode="participants",
+                              data_path="device", participation="sparse"))
+    # the client stream itself is device-path-only
+    with pytest.raises(ValueError, match="device data path"):
+        make_runner(mlp_loss, mlp_accuracy, clients, te, pol, cell,
+                    SimConfig(rounds=4, data_path="prestack",
+                              data_stream="client"))
+
+
+def test_bucket_overflow_is_a_hard_error():
+    world = mnist_world(rounds=6)
+    clients, te, cell, h, params = world
+    cfg = SimConfig(rounds=6, local_iters=1, batch_size=8, eval_batch=200,
+                    **SPARSE_KW, participation="sparse", participant_bucket=4)
+    runner = make_runner(mlp_loss, mlp_accuracy, clients, te,
+                         RandomScheme(p_bar=1.0, num_clients=8), cell, cfg)
+    with pytest.raises(RuntimeError, match="bucket overflow"):
+        runner(params, h)
+
+
+# --- one compile per bucket across a population sweep ------------------------
+
+
+def test_one_trace_per_bucket_across_K_sweep():
+    """K ∈ {64, 256, 1024} with a fixed expected transmitting count share
+    one participant bucket — the training program must trace exactly once
+    for the whole sweep (its shapes and statics never see K)."""
+    T, E, bucket = 6, 4, 16
+    base = dict(rounds=T, local_iters=2, batch_size=4, eval_every=3,
+                eval_batch=64, **SPARSE_KW, participation="sparse",
+                participant_bucket=bucket)
+    params = init_mlp(jax.random.PRNGKey(4), dims=(12, 8, 10))
+    before = sparse_mod.TRAIN_TRACE_COUNT
+    results = {}
+    for K in (64, 256, 1024):
+        clients, te, cell, h, _ = synth_world(K, T)
+        cfg = SimConfig(**base)
+        runner = make_runner(mlp_loss, mlp_accuracy, clients, te,
+                             RandomScheme(p_bar=E / K, num_clients=K), cell,
+                             cfg)
+        results[K] = runner(params, h)
+    assert sparse_mod.TRAIN_TRACE_COUNT - before == 1
+    for K, res in results.items():
+        assert res.participation.shape == (T, K)
+        assert np.isfinite(res.test_acc).all()
+        # realized transmitters stayed population-sparse
+        assert res.participation.sum(axis=1).max() <= bucket
+
+
+def test_participant_bucket_sizing():
+    assert participant_bucket(4.0, cap=1 << 20) == 32   # 4 + 6·√4 + 4 → 32
+    assert participant_bucket(100.0, cap=1 << 20) == 256
+    assert participant_bucket(100.0, cap=64) == 64          # clamped to K
+    assert participant_bucket(0.0, cap=1 << 20) >= 8        # floor
+    b = participant_bucket(1000.0, cap=1 << 20)
+    assert b >= 1000 + 6 * 1000 ** 0.5 and b & (b - 1) == 0
+
+
+# --- no population-sized buffer in the training program ----------------------
+
+
+def test_train_program_jaxpr_has_no_K_sized_array():
+    """At K = 10⁶ with a bucket of 32, the largest array anywhere in the
+    training program's jaxpr stays participant/horizon-sized — no
+    [K, N_max] gather, no [K, D] delta stack, not even a [K] vector."""
+    K, T, P, L, B, dim = 1_000_000, 8, 32, 2, 4, 12
+    cfg = SimConfig(rounds=T, local_iters=L, batch_size=B, eval_every=4,
+                    **SPARSE_KW)
+    params = init_mlp(jax.random.PRNGKey(0), dims=(dim, 8, 10))
+    program = build_sparse_train_program(mlp_loss, mlp_accuracy,
+                                         sgd(cfg.lr), cfg)
+    args = (params,
+            jax.ShapeDtypeStruct((T, P, L, B, dim), jnp.float32),
+            jax.ShapeDtypeStruct((T, P, L, B), jnp.int32),
+            jax.ShapeDtypeStruct((T, P), jnp.bool_),
+            jax.ShapeDtypeStruct((T, P), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((64, dim), jnp.float32),
+            jax.ShapeDtypeStruct((64,), jnp.int32))
+    max_elems = _max_var_elems(jax.make_jaxpr(program)(*args))
+    # the largest array is the gathered participant batch itself (~25k
+    # elements) — over an order of magnitude below even a bare [K] vector
+    assert max_elems < K // 10, max_elems
+    assert max_elems <= T * P * L * B * dim
+
+
+# --- per-client stream + participant compaction properties -------------------
+
+
+def test_compaction_is_sorted_padded_and_counted():
+    mask = jnp.array([0, 1, 0, 1, 1, 0], jnp.float32)
+    idx, valid, n = participants_from_mask(mask, bucket=5)
+    assert idx.tolist() == [1, 3, 4, 6, 6]    # ascending, sentinel K=6
+    assert valid.tolist() == [True, True, True, False, False]
+    assert int(n) == 3
+
+
+def test_client_stream_rows_independent_of_population():
+    """Row k of the dense client-stream reference equals the direct
+    per-client draw — the property that lets the sparse path sample only
+    its participants."""
+    key = data_stream_key(3)
+    lens = jnp.array([5, 9, 7, 3], jnp.int32)
+    dense = round_indices_client_stream(key, jnp.int32(4), lens, 3, 6)
+    from repro.data.device import client_round_indices
+    for k in range(4):
+        direct = client_round_indices(key, jnp.int32(4), jnp.int32(k),
+                                      lens[k], 3, 6)
+        np.testing.assert_array_equal(np.asarray(dense[k]),
+                                      np.asarray(direct))
+    assert bool(jnp.all(dense < lens[:, None, None]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 16), st.integers(0, 7),
+       st.lists(st.integers(1, 9), min_size=2, max_size=6),
+       st.integers(0, 2 ** 10))
+def test_property_participant_gather_matches_dense_stream(seed, t, lens,
+                                                          subset_bits):
+    """Property (any seed, round, shard sizes, participant subset): sampled
+    indices never land in padding, and gathering a participant subset is
+    bit-equal to the same rows of the dense client-stream draw."""
+    K = len(lens)
+    key = data_stream_key(seed)
+    lengths = jnp.asarray(lens, jnp.int32)
+    idx = round_indices_client_stream(key, jnp.int32(t), lengths, 2, 3)
+    assert bool(jnp.all(idx < lengths[:, None, None]))   # never in padding
+    assert bool(jnp.all(idx >= 0))
+
+    # store where x rows encode (client, example) uniquely
+    clients = [Dataset(
+        (jnp.arange(n, dtype=jnp.float32)[:, None] + 100.0 * k)
+        * jnp.ones((1, 2)), jnp.full((n,), k % 4, jnp.int32), 4)
+        for k, n in enumerate(lens)]
+    store = from_client_datasets(clients)
+    dense_x, dense_y = sample_round_client_stream(store, key, jnp.int32(t),
+                                                  2, 3)
+    chosen = [k for k in range(K) if (subset_bits >> k) & 1]
+    bucket = max(len(chosen), 1) + 1                     # ≥1 padding lane
+    part = jnp.asarray(chosen + [K] * (bucket - len(chosen)), jnp.int32)
+    gx, gy = gather_participant_rounds(store, key, part[None, :]
+                                       if t == 0 else
+                                       jnp.tile(part, (t + 1, 1)), 2, 3)
+    for p, k in enumerate(chosen):
+        np.testing.assert_array_equal(np.asarray(gx[t, p]),
+                                      np.asarray(dense_x[k]))
+        np.testing.assert_array_equal(np.asarray(gy[t, p]),
+                                      np.asarray(dense_y[k]))
+
+
+# --- huge-K store footprint math (the planner the sparse path relies on) -----
+
+
+def test_store_bytes_matches_built_store_exactly():
+    clients = [Dataset(jnp.ones((n, 5)), jnp.zeros((n,), jnp.int32), 3)
+               for n in (4, 9, 6)]
+    store = from_client_datasets(clients)
+    assert estimate_store_bytes(clients) == store.nbytes
+
+
+def test_store_bytes_counts_mask_blocks_and_survives_huge_K():
+    """The [K, N_max] int32 label block and the [K] lengths vector are part
+    of the footprint (the old estimate missed them), and K ~ 10⁹ planning
+    queries stay exact Python ints — no fixed-width overflow."""
+    K, cap, dim = 10 ** 9, 64, 784
+    b = store_bytes(K, cap, (dim,))
+    assert b == K * cap * (dim * 4 + 4) + K * 4
+    assert isinstance(b, int) and b > 2 ** 31          # far past int32
+    small = store_bytes(2, 3, (5,))
+    clients = [Dataset(jnp.ones((3, 5)), jnp.zeros((3,), jnp.int32), 2)
+               for _ in range(2)]
+    assert small == from_client_datasets(clients).nbytes
+
+
+def test_degenerate_partition_rejected_before_bincount():
+    """K > N cannot leave every client non-empty: the cap readback must
+    refuse early (before materializing a [K]-sized bincount)."""
+    from repro.data.device import _default_cap
+    assign = jnp.zeros((10,), jnp.int32)
+    with pytest.raises(ValueError, match="degenerate"):
+        _default_cap(assign, num_clients=10 ** 8)
+    with pytest.raises(ValueError, match="no examples"):
+        _default_cap(assign, num_clients=2)            # all mass on client 0
