@@ -13,14 +13,15 @@ import sys
 import time
 import traceback
 
-from . import (bench_algorithm1, bench_data, bench_engine, bench_kernels,
-               bench_staleness, fig2_3_rho_sweep, fig4_5_energy,
-               fig6_7_schemes, fig8_9_scenarios)
+from . import (bench_algorithm1, bench_data, bench_engine, bench_faults,
+               bench_kernels, bench_staleness, fig2_3_rho_sweep,
+               fig4_5_energy, fig6_7_schemes, fig8_9_scenarios)
 
 SUITES = [
     ("bench_algorithm1", bench_algorithm1.main),
     ("bench_data", lambda: bench_data.main_quick()),
     ("bench_engine", lambda: bench_engine.main_quick()),
+    ("bench_faults", lambda: bench_faults.main_quick()),
     ("bench_kernels", bench_kernels.main),
     ("bench_staleness", bench_staleness.main),
     ("fig2_3_rho_sweep", fig2_3_rho_sweep.main),

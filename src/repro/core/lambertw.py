@@ -12,6 +12,12 @@ import jax.numpy as jnp
 
 INV_E = 0.36787944117144233  # 1/e
 
+#: arguments this far below −1/e snap to the branch point instead of going
+#: NaN.  Callers compute ``−exp(−A)`` with ``A ≥ 1`` in float32 — rounding
+#: can land a mathematically-valid argument a few ulp outside the domain,
+#: and one NaN here would otherwise poison an entire scan carry.
+BRANCH_TOL = 1e-6
+
 
 def _initial_guess(x: jax.Array) -> jax.Array:
     # Series about the branch point x = -1/e:  W = -1 + p - p²/3 + 11p³/72, p=sqrt(2(ex+1))
@@ -30,8 +36,11 @@ def _initial_guess(x: jax.Array) -> jax.Array:
 
 @jax.jit
 def lambertw(x: jax.Array) -> jax.Array:
-    """W0(x) for x ≥ -1/e (element-wise).  NaN outside the domain."""
+    """W0(x) for x ≥ -1/e (element-wise).  NaN outside the domain, except
+    fp noise within ``BRANCH_TOL`` below -1/e, which clamps to the branch
+    point (W = -1)."""
     x = jnp.asarray(x, dtype=jnp.result_type(x, jnp.float32))
+    x = jnp.where((x < -INV_E) & (x >= -INV_E - BRANCH_TOL), -INV_E, x)
     w = _initial_guess(x)
 
     def halley(w, _):
@@ -45,7 +54,7 @@ def lambertw(x: jax.Array) -> jax.Array:
         return w - step, None
 
     w, _ = jax.lax.scan(halley, w, None, length=12)
-    w = jnp.where(x < -INV_E - 1e-9, jnp.nan, w)
+    w = jnp.where(x < -INV_E, jnp.nan, w)
     # exact at the branch point
     w = jnp.where(jnp.abs(x + INV_E) <= 1e-12, -1.0, w)
     return w

@@ -54,25 +54,35 @@ def solve_online(h: jax.Array, spec: ProblemSpec, max_outer: int = 200,
     c = spec.cell
     K, T = spec.K, spec.T
     rho = spec.rho if rho is None else rho
-    PkST1r = c.tx_power_w * c.model_size_nats * T * (1.0 - rho)
+    # ρ → 1 sends the energy weight (1−ρ) — and with it every P_k S T (1−ρ)
+    # denominator below — to exactly 0, turning the KKT residuals into 0/0.
+    # Clamp it to one fp32 ulp: the probabilities still clip to 1 (pure
+    # convergence objective) but every intermediate stays finite, so the
+    # solver is safe to vmap over a ρ grid that includes the endpoint.
+    tiny = jnp.asarray(1e-30, h.dtype)
+    PkST1r = (c.tx_power_w * c.model_size_nats * T
+              * jnp.maximum(1.0 - rho, 1e-7))
     zeta, eps = 0.1, 0.01  # damping: see algorithm1.solve
 
     w = jnp.full((K,), 1.0 / K, dtype=h.dtype)
     R = rate_nats(w, h, c.tx_power_w, c.bandwidth_hz, c.noise_w_per_hz)
-    p = jnp.clip((2 * rho / (K * (1.0 / R) * PkST1r)) ** (1 / 3),
-                 spec.lam, 1.0)
+    p = jnp.clip((2 * rho / jnp.maximum(K * (1.0 / R) * PkST1r, tiny))
+                 ** (1 / 3), spec.lam, 1.0)
     alpha, beta = 1.0 / R, p * PkST1r / R
 
     def res_sq(alpha, beta, p, R):
         psi = alpha * R - 1.0
-        kappa = beta * R / (p * PkST1r) - 1.0
+        kappa = beta * R / jnp.maximum(p * PkST1r, tiny) - 1.0
         return jnp.sum(psi**2) + jnp.sum(kappa**2)
 
     def outer(carry):
         alpha, beta, p, w, it, _ = carry
-        # (46): closed-form probability given α
-        p = jnp.clip((2 * rho / (K * alpha * PkST1r)) ** (1 / 3),
-                     spec.lam, 1.0)
+        # (46): closed-form probability given α; α_k → 0 (a deep-faded
+        # client's 1/R_k) with ρ = 0 is the other 0/0 corner — the max()
+        # keeps the ratio finite and the clip lands on λ as the closed
+        # form prescribes
+        p = jnp.clip((2 * rho / jnp.maximum(K * alpha * PkST1r, tiny))
+                     ** (1 / 3), spec.lam, 1.0)
         # (31)/(33): bandwidth given α·β
         w = solve_p4(alpha * beta, h, c)
         R = rate_nats(w, h, c.tx_power_w, c.bandwidth_hz, c.noise_w_per_hz)

@@ -44,8 +44,10 @@ from ..data.device import (StreamingSampler, choose_data_path,
 from ..data.pipeline import BatchIterator, client_batches
 from ..data.synthetic import Dataset
 from ..optim import Optimizer, sgd
-from .state import (FLState, broadcast_to_participants, init_fl_state,
-                    masked_aggregate, pseudo_gradients)
+from .faults import (FaultConfig, FaultState, GuardConfig, apply_faults,
+                     corrupt_deltas, init_fault_state)
+from .state import (FLState, broadcast_to_participants, guarded_aggregate,
+                    init_fl_state, masked_aggregate, pseudo_gradients)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +87,27 @@ class SimConfig:
     # (fold_in(fold_in(data_key, t), k)) so a participant's batch can be
     # sampled without touching the other K-1 clients (sparse path needs it).
     data_stream: str = "round"
+    # --- robustness layer (docs/robustness.md) -----------------------------
+    # fault injection: None leaves the engine's program byte-for-byte
+    # unchanged (the bit-parity guarantee); a FaultConfig threads jittable
+    # availability/crash/uplink-loss/corruption processes through the scan.
+    faults: FaultConfig | None = None
+    # defensive aggregation: None (or an all-off GuardConfig) is
+    # bit-identical to the plain eq.-3 update; otherwise non-finite
+    # quarantine, norm clipping and staleness down-weighting apply.
+    guards: GuardConfig | None = None
+    # eval placement: "inscan" evaluates at eval_every strides via lax.cond
+    # inside the scan (both branches execute under vmap); "replay" skips
+    # in-scan evals entirely — the resumable driver evaluates its strided
+    # param checkpoints post-hoc in one batched pass (fl/resume.py).
+    eval_mode: str = "inscan"
+    # resumable execution: segment length for fl.resume.run_resumable (the
+    # checkpoint stride); None = eval_every.
+    checkpoint_every: int | None = None
+    # sparse participant_bucket overflow handling: "spill" regrows the
+    # bucket toward the dense width and reruns (warn once), "error" keeps
+    # the legacy hard RuntimeError.
+    overflow: str = "spill"
 
 
 class SimResult(NamedTuple):
@@ -93,18 +116,30 @@ class SimResult(NamedTuple):
     eval_rounds: np.ndarray     # [n_evals]
     energy_per_client: np.ndarray  # [K] cumulative Joules
     energy_timeline: np.ndarray    # [rounds] cumulative total energy
-    participation: np.ndarray      # [rounds, K] realized masks
+    participation: np.ndarray      # [rounds, K] realized decision masks
     state: FLState
+    # fault-injection extras (None on clean runs — the legacy 7-field
+    # contract is unchanged): what actually landed at the server after
+    # availability/crash/uplink-loss, and which deliveries were corrupted.
+    delivered: np.ndarray | None = None   # [rounds, K]
+    corrupted: np.ndarray | None = None   # [rounds, K]
 
 
 class RoundTrace(NamedTuple):
-    """Per-round scan outputs (leading axis T after the scan)."""
+    """Per-round scan outputs (leading axis T after the scan).
 
-    mask: jax.Array      # [K] realized participation
-    e_round: jax.Array   # [K] Joules spent this round
+    ``delivered``/``corrupt`` mirror ``mask`` when faults are disabled (the
+    fault pipeline is not even traced then — they are aliases of ``mask`` /
+    zeros, adding nothing to the program).
+    """
+
+    mask: jax.Array      # [K] realized participation (the decision)
+    e_round: jax.Array   # [K] Joules spent this round (incl. retry cost)
     acc: jax.Array       # scalar (0 when did_eval is False)
     loss: jax.Array      # scalar (0 when did_eval is False)
     did_eval: jax.Array  # bool scalar
+    delivered: jax.Array  # [K] updates that actually landed at the server
+    corrupt: jax.Array    # [K] bool — delivered but adversarially poisoned
 
 
 # ---------------------------------------------------------------------------
@@ -286,28 +321,62 @@ def _client_mesh(num_clients: int):
     return Mesh(np.asarray(devs[:d]), ("k",))
 
 
+def init_carry(params: Any, num_clients: int, cfg: SimConfig):
+    """The scan carry: ``(FLState, energy)``, plus the per-client
+    :class:`~repro.fl.faults.FaultState` when fault injection is on.  The
+    faults-off structure is exactly the pre-robustness carry — existing
+    programs are untouched."""
+    state0 = init_fl_state(params, num_clients)
+    energy0 = jnp.zeros((num_clients,), jnp.float32)
+    if cfg.faults is not None:
+        return (state0, energy0, init_fault_state(num_clients))
+    return (state0, energy0)
+
+
 def _make_round_step(vtrain: Callable, loss_fn: Callable, acc_fn: Callable,
                      cfg: SimConfig, cell: CellConfig, num_clients: int,
                      policy_fn: PolicyFn, hoist: bool):
     """The per-round transition shared by every execution mode (full scan
     over pre-stacked batches, in-scan device-store sampling, streaming
-    round-chunks): protocol Steps 1-5, energy ledger, strided eval."""
+    round-chunks): protocol Steps 1-5, fault pipeline, energy ledger,
+    defensive aggregation, strided eval."""
     K = num_clients
+    faults = cfg.faults
+    guards = cfg.guards
+    if cfg.eval_mode not in ("inscan", "replay"):
+        raise ValueError(f"unknown eval_mode {cfg.eval_mode!r} "
+                         "(expected inscan|replay)")
 
-    def round_step(carry, t, h_t, xb, yb, pw, base_key, test_x, test_y):
-        state, energy = carry
+    def round_step(carry, t, h_t, xb, yb, pw, base_key, test_x, test_y,
+                   fp=None):
+        if faults is not None:
+            state, energy, fstate = carry
+        else:
+            state, energy = carry
         # --- Steps 2-4: policy, Bernoulli draws, Δ_k, energy (eq. 5) -------
         probs, w = pw if hoist else policy_fn(t, h_t, state)
         mask, forced, w, e_round = apply_round_decision(
             probs, w, t, h_t, state, base_key, cfg, cell, K)
+        # --- fault pipeline: availability → crash → lossy uplink -----------
+        # (salted fold_in streams — the decision draw above is untouched)
+        if faults is not None:
+            out, fstate = apply_faults(t, base_key, mask, e_round, fstate,
+                                       fp, faults)
+            delivered, corrupt, e_round = out.delivered, out.corrupt, \
+                out.e_round
+        else:
+            delivered = mask
+            corrupt = jnp.zeros((K,), bool)
         energy = energy + e_round
         # --- Step 1 (local training) + Steps 4-5 ---------------------------
         client = vtrain(state.client_params, xb, yb)
         if cfg.local_mode == "participants":
-            # only the transmitting set moves; non-participants keep
-            # client == anchor (their pseudo-gradient stays exactly zero)
+            # only clients whose update lands move; everyone else keeps
+            # client == anchor (their pseudo-gradient stays exactly zero —
+            # a crashed/lost upload's training is discarded with it)
             def keep(new, old):
-                m = mask.reshape((-1,) + (1,) * (new.ndim - 1)).astype(bool)
+                m = delivered.reshape(
+                    (-1,) + (1,) * (new.ndim - 1)).astype(bool)
                 return jnp.where(m, new, old)
 
             client = jax.tree_util.tree_map(keep, client,
@@ -317,23 +386,42 @@ def _make_round_step(vtrain: Callable, loss_fn: Callable, acc_fn: Callable,
                              "(expected continuous|participants)")
         state = state._replace(client_params=client)
         deltas = pseudo_gradients(state)
-        new_global = masked_aggregate(state.global_params, deltas, mask, K)
-        state = broadcast_to_participants(state, new_global, mask)
+        if faults is not None:
+            deltas = corrupt_deltas(deltas, corrupt, fp, faults)
+        if guards is not None and guards.active:
+            staleness = state.round - state.last_tx
+            new_global = guarded_aggregate(state.global_params, deltas,
+                                           delivered, K, staleness, guards)
+        else:
+            new_global = masked_aggregate(state.global_params, deltas,
+                                          delivered, K)
+        state = broadcast_to_participants(state, new_global, delivered)
 
-        # --- strided eval (stays on device; read back once at the end) -----
-        def eval_now(p):
-            return (jnp.asarray(acc_fn(p, test_x, test_y), jnp.float32),
-                    jnp.asarray(loss_fn(p, test_x, test_y), jnp.float32))
+        # --- strided eval (stays on device; read back once at the end).
+        # "replay" skips the cond entirely — the resumable driver evaluates
+        # its strided param checkpoints post-hoc instead (both lax.cond
+        # branches execute under vmap, so matrix sweeps want this off) -----
+        if cfg.eval_mode == "replay":
+            acc = jnp.zeros((), jnp.float32)
+            loss = jnp.zeros((), jnp.float32)
+            do_eval = jnp.zeros((), bool)
+        else:
+            def eval_now(p):
+                return (jnp.asarray(acc_fn(p, test_x, test_y), jnp.float32),
+                        jnp.asarray(loss_fn(p, test_x, test_y), jnp.float32))
 
-        def skip_eval(p):
-            del p
-            return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+            def skip_eval(p):
+                del p
+                return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
 
-        do_eval = jnp.logical_or(t % cfg.eval_every == 0,
-                                 t == cfg.rounds - 1)
-        acc, loss = jax.lax.cond(do_eval, eval_now, skip_eval,
-                                 state.global_params)
-        return (state, energy), RoundTrace(mask, e_round, acc, loss, do_eval)
+            do_eval = jnp.logical_or(t % cfg.eval_every == 0,
+                                     t == cfg.rounds - 1)
+            acc, loss = jax.lax.cond(do_eval, eval_now, skip_eval,
+                                     state.global_params)
+        carry = ((state, energy, fstate) if faults is not None
+                 else (state, energy))
+        return carry, RoundTrace(mask, e_round, acc, loss, do_eval,
+                                 delivered, corrupt)
 
     return round_step
 
@@ -398,30 +486,37 @@ def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
         # dummy per-round operands; the policy runs in the scan body
         return (jnp.zeros((cfg.rounds, 0)),) * 2
 
+    def _resolve_fp(fault_params):
+        if cfg.faults is None:
+            return None
+        return cfg.faults.params() if fault_params is None else fault_params
+
     def _scan(params, step, xs):
-        state0 = init_fl_state(params, K)
-        energy0 = jnp.zeros((K,), jnp.float32)
-        (state, energy), traces = jax.lax.scan(step, (state0, energy0), xs)
+        carry0 = init_carry(params, K, cfg)
+        final, traces = jax.lax.scan(step, carry0, xs)
+        state, energy = final[0], final[1]
         return state, energy, traces
 
     if data_mode == "prestack":
         def simulate(params, xb_all, yb_all, h_rounds, base_key, test_x,
-                     test_y, pw_all=None):
+                     test_y, pw_all=None, fault_params=None):
             ts_all = jnp.arange(cfg.rounds, dtype=jnp.int32)
             pw_all = _resolve_pw(h_rounds, pw_all)
+            fp = _resolve_fp(fault_params)
 
             def step(carry, xs):
                 t, h_t, xb, yb, pw = xs
                 return round_step(carry, t, h_t, xb, yb, pw, base_key,
-                                  test_x, test_y)
+                                  test_x, test_y, fp=fp)
 
             return _scan(params, step, (ts_all, h_rounds, xb_all, yb_all,
                                         pw_all))
     elif data_mode == "device":
         def simulate(params, store, data_key, h_rounds, base_key, test_x,
-                     test_y, pw_all=None):
+                     test_y, pw_all=None, fault_params=None):
             ts_all = jnp.arange(cfg.rounds, dtype=jnp.int32)
             pw_all = _resolve_pw(h_rounds, pw_all)
+            fp = _resolve_fp(fault_params)
 
             sample = (sample_round_client_stream
                       if cfg.data_stream == "client" else sample_round)
@@ -431,7 +526,7 @@ def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
                 xb, yb = sample(store, data_key, t, cfg.local_iters,
                                 cfg.batch_size)
                 return round_step(carry, t, h_t, xb, yb, pw, base_key,
-                                  test_x, test_y)
+                                  test_x, test_y, fp=fp)
 
             return _scan(params, step, (ts_all, h_rounds, pw_all))
     else:
@@ -448,28 +543,61 @@ def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
 
 def build_chunk_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
                     cfg: SimConfig, cell: CellConfig, num_clients: int,
-                    policy_fn: PolicyFn):
-    """Streaming building block: the identical round transition scanned over
-    one round-*chunk* with an explicit ``(FLState, energy)`` carry.
+                    policy_fn: PolicyFn, data_mode: str = "prestack"):
+    """Streaming/resumable building block: the identical round transition
+    scanned over one round-*chunk* with an explicit carry (see
+    :func:`init_carry` — ``(FLState, energy[, FaultState])``).
 
-    ``chunk(carry, ts, h, xb, yb, pw, base_key, test_x, test_y)`` consumes
-    absolute round ids ``ts`` (so ``fold_in(·, t)`` streams and the
-    eval-stride/final-round conditions match the single-scan engines
-    bit-wise) and chunk-major batch arrays ``[C, K, L, B, ...]``; the host
-    loop threads the carry across chunks (see ``make_runner``'s stream
-    path)."""
+    ``data_mode="prestack"``: ``chunk(carry, ts, h, xb, yb, pw, base_key,
+    test_x, test_y, fault_params=None)`` consumes absolute round ids ``ts``
+    (so ``fold_in(·, t)`` streams and the eval-stride/final-round conditions
+    match the single-scan engines bit-wise) and chunk-major batch arrays
+    ``[C, K, L, B, ...]``; the host loop threads the carry across chunks
+    (see ``make_runner``'s stream path).
+
+    ``data_mode="device"``: ``chunk(carry, ts, h, pw, store, data_key,
+    base_key, test_x, test_y, fault_params=None)`` gathers each round's
+    batch from the resident store inside the chunk body — what the
+    resumable driver (:mod:`repro.fl.resume`) runs segment by segment.
+    """
     vtrain = make_local_train(loss_fn, opt)
     hoist = getattr(policy_fn, "state_free", False)
     round_step = _make_round_step(vtrain, loss_fn, acc_fn, cfg, cell,
                                   num_clients, policy_fn, hoist)
 
-    def chunk(carry, ts, h, xb, yb, pw, base_key, test_x, test_y):
-        def step(c, xs):
-            t, h_t, xbt, ybt, pwt = xs
-            return round_step(c, t, h_t, xbt, ybt, pwt, base_key, test_x,
-                              test_y)
+    def _fp(fault_params):
+        if cfg.faults is None:
+            return None
+        return cfg.faults.params() if fault_params is None else fault_params
 
-        return jax.lax.scan(step, carry, (ts, h, xb, yb, pw))
+    if data_mode == "prestack":
+        def chunk(carry, ts, h, xb, yb, pw, base_key, test_x, test_y,
+                  fault_params=None):
+            fp = _fp(fault_params)
+
+            def step(c, xs):
+                t, h_t, xbt, ybt, pwt = xs
+                return round_step(c, t, h_t, xbt, ybt, pwt, base_key,
+                                  test_x, test_y, fp=fp)
+
+            return jax.lax.scan(step, carry, (ts, h, xb, yb, pw))
+    elif data_mode == "device":
+        def chunk(carry, ts, h, pw, store, data_key, base_key, test_x,
+                  test_y, fault_params=None):
+            fp = _fp(fault_params)
+            sample = (sample_round_client_stream
+                      if cfg.data_stream == "client" else sample_round)
+
+            def step(c, xs):
+                t, h_t, pwt = xs
+                xb, yb = sample(store, data_key, t, cfg.local_iters,
+                                cfg.batch_size)
+                return round_step(c, t, h_t, xb, yb, pwt, base_key,
+                                  test_x, test_y, fp=fp)
+
+            return jax.lax.scan(step, carry, (ts, h, pw))
+    else:
+        raise ValueError(f"unknown data_mode {data_mode!r}")
 
     chunk.hoist = hoist
     return chunk
@@ -480,6 +608,7 @@ def _to_result(state, energy, traces, cfg: SimConfig) -> SimResult:
     did = np.asarray(traces.did_eval)
     idx = np.where(did)[0]
     e_round = np.asarray(traces.e_round)               # [T, K]
+    faulty = cfg.faults is not None
     return SimResult(
         test_acc=np.asarray(traces.acc)[idx],
         test_loss=np.asarray(traces.loss)[idx],
@@ -488,6 +617,8 @@ def _to_result(state, energy, traces, cfg: SimConfig) -> SimResult:
         energy_timeline=np.cumsum(e_round.sum(axis=1)),
         participation=np.asarray(traces.mask),
         state=state,
+        delivered=np.asarray(traces.delivered) if faulty else None,
+        corrupted=np.asarray(traces.corrupt) if faulty else None,
     )
 
 
@@ -519,7 +650,7 @@ def _make_stream_runner(loss_fn: Callable, acc_fn: Callable,
         h_rounds = jnp.swapaxes(h_all, 0, 1)
         pw_full = (pol(ts_full, h_rounds) if hoist
                    else (jnp.zeros((T, 0)),) * 2)
-        carry = (init_fl_state(params, K), jnp.zeros((K,), jnp.float32))
+        carry = init_carry(params, K, cfg)
         buf = sampler.chunk(*bounds[0])
         traces = []
         for i, (t0, t1) in enumerate(bounds):
@@ -529,7 +660,7 @@ def _make_stream_runner(loss_fn: Callable, acc_fn: Callable,
             if i + 1 < len(bounds):   # prefetch overlaps the async chunk
                 buf = sampler.chunk(*bounds[i + 1])
             traces.append(tr)
-        state, energy = carry
+        state, energy = carry[0], carry[1]
         traces = jax.tree_util.tree_map(
             lambda *xs: jnp.concatenate(xs, axis=0), *traces)
         return _to_result(state, energy, traces, cfg)

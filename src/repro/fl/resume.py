@@ -1,0 +1,244 @@
+"""Resumable scan execution: strided param checkpoints + kill-and-resume.
+
+A long-horizon sweep that dies at round 1900 of 2000 used to restart from
+round 0 — nothing inside one monolithic ``lax.scan`` survives the process.
+This driver splits the horizon into ``cfg.checkpoint_every``-round segments
+and runs the *identical* round transition (:func:`repro.fl.engine.
+build_chunk_sim` — same ``fold_in`` PRNG/data streams, absolute round ids)
+segment by segment, persisting the scan carry after each one:
+
+* **checkpoint stride** — after segment ``i`` the full carry
+  (``FLState``, energy ledger, fault state when injection is on) is written
+  to ``<ckpt_dir>/seg_i`` via :mod:`repro.checkpoint`, the segment's round
+  trace to ``seg_i_trace.npz``, and a ``seg_i.done`` marker commits the
+  pair (a crash mid-write leaves no marker — the segment simply reruns).
+* **resume** — the next :func:`run_resumable` call on the same directory
+  verifies the run fingerprint (horizon, seed, K, fault/guard configs),
+  restores the last committed carry, and continues from the first
+  incomplete segment.  Because segment boundaries change neither the PRNG
+  streams nor the op order, a killed-and-resumed run reproduces the
+  uninterrupted run's final params **bit-exactly** (``tests/test_resume.py``
+  pins this, faults included).
+* **post-hoc replay evals** — with ``cfg.eval_mode="replay"`` the scan body
+  contains no ``lax.cond`` eval at all (under ``vmap`` both branches of the
+  old in-scan pattern executed every round); the driver instead evaluates
+  the strided segment-boundary checkpoints in one batched pass at the end.
+  ``eval_mode="inscan"`` keeps the legacy in-scan strides for bit-parity
+  with ``make_runner``.
+
+The driver accepts the device data path (in-scan store sampling) and the
+host-streaming path (the :class:`~repro.data.device.StreamingSampler` chunk
+stream is a pure function of ``(data_key, t)`` — segments re-gather their
+rounds identically after a restart).  The legacy ``prestack`` path keeps
+stateful host iterators and cannot resume mid-stream; it is rejected with a
+pointer here.
+
+See ``docs/robustness.md`` for the protocol details.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import load_checkpoint, save_checkpoint
+from ..core.channel import CellConfig
+from ..core.selection import as_policy_fn
+from ..data.device import (StreamingSampler, data_stream_key,
+                           from_client_datasets)
+from ..data.synthetic import Dataset
+from ..optim import Optimizer, sgd
+from .engine import (RoundTrace, SimConfig, SimResult, build_chunk_sim,
+                     init_carry, resolve_data_path)
+
+__all__ = ["run_resumable", "segment_bounds", "completed_segments"]
+
+
+def segment_bounds(rounds: int, stride: int) -> list:
+    """``[(t0, t1), ...]`` covering ``[0, rounds)`` in ``stride``-round
+    segments (the last may be shorter)."""
+    C = max(1, int(stride))
+    return [(t0, min(t0 + C, rounds)) for t0 in range(0, rounds, C)]
+
+
+def _fingerprint(cfg: SimConfig, num_clients: int, data_path: str) -> dict:
+    """What must match for a resume to be sound: anything that changes the
+    PRNG streams, shapes, or per-round math."""
+    return {
+        "rounds": cfg.rounds, "local_iters": cfg.local_iters,
+        "batch_size": cfg.batch_size, "lr": cfg.lr, "seed": cfg.seed,
+        "eval_every": cfg.eval_every, "eval_mode": cfg.eval_mode,
+        "max_staleness": cfg.max_staleness, "aging_boost": cfg.aging_boost,
+        "local_mode": cfg.local_mode, "data_stream": cfg.data_stream,
+        "data_path": data_path, "num_clients": num_clients,
+        "checkpoint_every": cfg.checkpoint_every,
+        "faults": repr(cfg.faults), "guards": repr(cfg.guards),
+    }
+
+
+def _seg_base(ckpt_dir: str, i: int) -> str:
+    return os.path.join(ckpt_dir, f"seg_{i:05d}")
+
+
+def completed_segments(ckpt_dir: str, n_segments: int) -> int:
+    """Number of leading segments with committed checkpoints (``.done``
+    markers); a gap ends the count — later orphans are rerun."""
+    n = 0
+    for i in range(n_segments):
+        if not os.path.exists(_seg_base(ckpt_dir, i) + ".done"):
+            break
+        n += 1
+    return n
+
+
+def _save_segment(ckpt_dir: str, i: int, carry, trace, meta: dict) -> None:
+    base = _seg_base(ckpt_dir, i)
+    save_checkpoint(base, carry, metadata=meta)
+    np.savez(base + "_trace.npz",
+             **{f: np.asarray(getattr(trace, f))
+                for f in RoundTrace._fields})
+    with open(base + ".done", "w") as f:
+        f.write("ok")
+
+
+def _load_trace(ckpt_dir: str, i: int) -> RoundTrace:
+    data = np.load(_seg_base(ckpt_dir, i) + "_trace.npz")
+    return RoundTrace(**{f: data[f] for f in RoundTrace._fields})
+
+
+def run_resumable(init_params: Any,
+                  loss_fn: Callable,
+                  acc_fn: Callable,
+                  client_data: Sequence[Dataset],
+                  test_ds: Dataset,
+                  policy,
+                  h_all: jax.Array,            # [K, rounds]
+                  cell: CellConfig,
+                  cfg: SimConfig,
+                  ckpt_dir: str,
+                  opt: Optimizer | None = None,
+                  stop_after_segment: Optional[int] = None,
+                  data_budget_bytes: int | None = None) -> SimResult | None:
+    """Run (or continue) a checkpointed simulation; returns the usual
+    :class:`~repro.fl.engine.SimResult`.
+
+    ``stop_after_segment=n`` exits after committing ``n`` *new* segments and
+    returns ``None`` — the test hook that simulates a mid-run kill; the next
+    call with the same ``ckpt_dir`` picks up where it stopped.
+    """
+    K = len(client_data)
+    T = cfg.rounds
+    opt = opt or sgd(cfg.lr)
+    policy_fn = as_policy_fn(policy)
+    path = resolve_data_path(client_data, cfg, None, data_budget_bytes)
+    if path == "prestack":
+        raise ValueError(
+            "the prestack data path consumes stateful host iterators and "
+            "cannot resume mid-stream; use data_path='device' or 'stream' "
+            "(both draw from stateless fold_in index streams)")
+    bounds = segment_bounds(T, cfg.checkpoint_every or cfg.eval_every)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    fp = _fingerprint(cfg, K, path)
+
+    test_x = test_ds.x[: cfg.eval_batch]
+    test_y = test_ds.y[: cfg.eval_batch]
+    h_rounds = jnp.swapaxes(h_all, 0, 1)               # [T, K]
+    key = jax.random.PRNGKey(cfg.seed)
+    ts_full = jnp.arange(T, dtype=jnp.int32)
+
+    raw = build_chunk_sim(loss_fn, acc_fn, opt, cfg, cell, K, policy_fn,
+                          data_mode=("device" if path == "device"
+                                     else "prestack"))
+    chunk_fn = jax.jit(raw)
+    pw_full = (jax.jit(jax.vmap(lambda t, h: policy_fn(t, h, None)))(
+        ts_full, h_rounds) if raw.hoist
+        else (jnp.zeros((T, 0)),) * 2)
+
+    if path == "device":
+        store = from_client_datasets(client_data)
+        data_key = data_stream_key(cfg.seed)
+        sampler = None
+    else:
+        sampler = StreamingSampler(client_data, data_stream_key(cfg.seed),
+                                   cfg.local_iters, cfg.batch_size)
+
+    # --- restore ------------------------------------------------------------
+    done = completed_segments(ckpt_dir, len(bounds))
+    like = init_carry(init_params, K, cfg)
+    if done > 0:
+        carry, meta = load_checkpoint(_seg_base(ckpt_dir, done - 1), like)
+        if meta.get("fingerprint") != fp:
+            raise ValueError(
+                f"checkpoint directory {ckpt_dir!r} holds a different run "
+                f"(saved {meta.get('fingerprint')} vs current {fp}); use a "
+                "fresh directory or matching config")
+        traces = [_load_trace(ckpt_dir, i) for i in range(done)]
+    else:
+        carry = like
+        traces = []
+
+    # --- run the remaining segments ----------------------------------------
+    fresh = 0
+    for i in range(done, len(bounds)):
+        t0, t1 = bounds[i]
+        pw_c = jax.tree_util.tree_map(lambda p: p[t0:t1], pw_full)
+        if path == "device":
+            carry, tr = chunk_fn(carry, ts_full[t0:t1], h_rounds[t0:t1],
+                                 pw_c, store, data_key, key, test_x, test_y)
+        else:
+            xb, yb = sampler.chunk(t0, t1)
+            carry, tr = chunk_fn(carry, ts_full[t0:t1], h_rounds[t0:t1],
+                                 xb, yb, pw_c, key, test_x, test_y)
+        _save_segment(ckpt_dir, i, carry, tr,
+                      {"t0": t0, "t1": t1, "segment": i, "fingerprint": fp})
+        traces.append(tr)
+        fresh += 1
+        if stop_after_segment is not None and fresh >= stop_after_segment \
+                and i + 1 < len(bounds):
+            return None                                # simulated kill
+
+    state, energy = carry[0], carry[1]
+    trace = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0),
+        *traces)
+
+    if cfg.eval_mode == "replay":
+        return _replay_result(state, energy, trace, cfg, bounds, ckpt_dir,
+                              like, loss_fn, acc_fn, test_x, test_y)
+    from .engine import _to_result
+    return _to_result(state, energy, trace, cfg)
+
+
+def _replay_result(state, energy, trace, cfg: SimConfig, bounds, ckpt_dir,
+                   like, loss_fn, acc_fn, test_x, test_y) -> SimResult:
+    """Post-hoc strided evals: load every segment-boundary checkpoint's
+    global params and evaluate them in one batched device call — the
+    replacement for the in-scan ``lax.cond`` eval (which executes both
+    branches every round under vmap)."""
+    boundary_params = []
+    for i in range(len(bounds)):
+        carry_i, _ = load_checkpoint(_seg_base(ckpt_dir, i), like)
+        boundary_params.append(carry_i[0].global_params)
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+        *boundary_params)
+    accs, losses = jax.jit(jax.vmap(
+        lambda p: (jnp.asarray(acc_fn(p, test_x, test_y), jnp.float32),
+                   jnp.asarray(loss_fn(p, test_x, test_y), jnp.float32))))(
+        stacked)
+    e_round = np.asarray(trace.e_round)
+    faulty = cfg.faults is not None
+    return SimResult(
+        test_acc=np.asarray(accs),
+        test_loss=np.asarray(losses),
+        eval_rounds=np.asarray([t1 - 1 for _, t1 in bounds]),
+        energy_per_client=np.asarray(energy),
+        energy_timeline=np.cumsum(e_round.sum(axis=1)),
+        participation=np.asarray(trace.mask),
+        state=state,
+        delivered=np.asarray(trace.delivered) if faulty else None,
+        corrupted=np.asarray(trace.corrupt) if faulty else None,
+    )

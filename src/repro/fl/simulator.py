@@ -35,34 +35,57 @@ from ..optim import Optimizer, sgd
 from .engine import (SimConfig, SimResult, empty_client_batches,
                      make_local_train, resolve_data_path, round_decision,
                      run_simulation_scan)
-from .state import (FLState, broadcast_to_participants, init_fl_state,
-                    masked_aggregate, pseudo_gradients)
+from .faults import (FaultConfig, GuardConfig, apply_faults, corrupt_deltas,
+                     init_fault_state)
+from .state import (FLState, broadcast_to_participants, guarded_aggregate,
+                    init_fl_state, masked_aggregate, pseudo_gradients)
 
 __all__ = ["SimConfig", "SimResult", "run_simulation",
            "run_simulation_legacy", "make_round_fn"]
 
 
 def make_round_fn(loss_fn: Callable, opt: Optimizer, local_iters: int,
-                  num_clients: int, local_mode: str = "continuous"):
-    """Build the jitted per-round transition over stacked client states."""
+                  num_clients: int, local_mode: str = "continuous",
+                  faults: FaultConfig | None = None,
+                  guards: GuardConfig | None = None):
+    """Build the jitted per-round transition over stacked client states.
+
+    With faults/guards the transition takes the fault pipeline's extra
+    operands — ``fl_round(state, mask, xb, yb, delivered, corrupt)`` — and
+    applies the same corruption transform and defensive aggregation as the
+    scan engine's round step (the legacy loop is the bit-parity witness for
+    the robustness layer too).
+    """
     vtrain = make_local_train(loss_fn, opt)
+    fparams = faults.params() if faults is not None else None
 
     @jax.jit
     def fl_round(state: FLState, mask: jax.Array, xb: jax.Array,
-                 yb: jax.Array) -> FLState:
+                 yb: jax.Array, delivered: jax.Array | None = None,
+                 corrupt: jax.Array | None = None) -> FLState:
+        landed = mask if delivered is None else delivered
         client = vtrain(state.client_params, xb, yb)
         if local_mode == "participants":
             def keep(new, old):
-                m = mask.reshape((-1,) + (1,) * (new.ndim - 1)).astype(bool)
+                m = landed.reshape(
+                    (-1,) + (1,) * (new.ndim - 1)).astype(bool)
                 return jnp.where(m, new, old)
 
             client = jax.tree_util.tree_map(keep, client,
                                             state.client_params)
         state = state._replace(client_params=client)
         deltas = pseudo_gradients(state)
-        new_global = masked_aggregate(state.global_params, deltas, mask,
-                                      num_clients)
-        return broadcast_to_participants(state, new_global, mask)
+        if faults is not None and corrupt is not None:
+            deltas = corrupt_deltas(deltas, corrupt, fparams, faults)
+        if guards is not None and guards.active:
+            staleness = state.round - state.last_tx
+            new_global = guarded_aggregate(state.global_params, deltas,
+                                           landed, num_clients, staleness,
+                                           guards)
+        else:
+            new_global = masked_aggregate(state.global_params, deltas,
+                                          landed, num_clients)
+        return broadcast_to_participants(state, new_global, landed)
 
     return fl_round
 
@@ -109,11 +132,20 @@ def run_simulation_legacy(init_params: Any,
     policy_fn = as_policy_fn(policy)
     state = init_fl_state(init_params, K)
     round_fn = make_round_fn(loss_fn, opt, cfg.local_iters, K,
-                             local_mode=cfg.local_mode)
+                             local_mode=cfg.local_mode, faults=cfg.faults,
+                             guards=cfg.guards)
     base_key = jax.random.PRNGKey(cfg.seed)
 
     decide = jax.jit(lambda t, h_t, st: round_decision(
         policy_fn, t, h_t, st, base_key, cfg, cell, K))
+
+    # fault pipeline: same salted fold_in streams as the scan engine, so the
+    # two realize identical faults round for round
+    if cfg.faults is not None:
+        fstate = init_fault_state(K)
+        fparams = cfg.faults.params()
+        fault_step = jax.jit(lambda t, m, e, fs: apply_faults(
+            t, base_key, m, e, fs, fparams, cfg.faults))
 
     data_path = resolve_data_path(client_data, cfg)
     data_key = data_stream_key(cfg.seed)
@@ -136,6 +168,8 @@ def run_simulation_legacy(init_params: Any,
     energy = np.zeros((K,), np.float32)
     energy_tl = np.zeros((cfg.rounds,))
     parts = np.zeros((cfg.rounds, K), np.float32)
+    delivered_tl = np.zeros((cfg.rounds, K), np.float32)
+    corrupt_tl = np.zeros((cfg.rounds, K), np.float32)
     accs, losses, eval_rounds = [], [], []
 
     test_x = test_ds.x[: cfg.eval_batch]
@@ -166,12 +200,21 @@ def run_simulation_legacy(init_params: Any,
 
         # --- policy + autonomous decisions + energy ledger (eq. 5) ---------
         mask, forced, w, e_round = decide(jnp.int32(t), h_all[:, t], state)
+        # --- fault pipeline (availability → crash → lossy uplink) ----------
+        if cfg.faults is not None:
+            out, fstate = fault_step(jnp.int32(t), mask, e_round, fstate)
+            delivered, corrupt, e_round = (out.delivered, out.corrupt,
+                                           out.e_round)
+            delivered_tl[t] = np.asarray(delivered)
+            corrupt_tl[t] = np.asarray(corrupt)
+        else:
+            delivered, corrupt = None, None
         energy += np.asarray(e_round)
         energy_tl[t] = energy.sum()
         parts[t] = np.asarray(mask)
 
         # --- one protocol round --------------------------------------------
-        state = round_fn(state, mask, xb, yb)
+        state = round_fn(state, mask, xb, yb, delivered, corrupt)
 
         if t % cfg.eval_every == 0 or t == cfg.rounds - 1:
             a, l = eval_fn(state.global_params)
@@ -179,5 +222,8 @@ def run_simulation_legacy(init_params: Any,
             losses.append(float(l))
             eval_rounds.append(t)
 
+    faulty = cfg.faults is not None
     return SimResult(np.asarray(accs), np.asarray(losses),
-                     np.asarray(eval_rounds), energy, energy_tl, parts, state)
+                     np.asarray(eval_rounds), energy, energy_tl, parts, state,
+                     delivered=delivered_tl if faulty else None,
+                     corrupted=corrupt_tl if faulty else None)

@@ -46,6 +46,7 @@ Memory: phase B replaces the dense ``[K, D]`` client/anchor stacks with the
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
@@ -59,7 +60,8 @@ from ..data.device import (DeviceDataStore, data_stream_key,
                            from_client_datasets, gather_participant_rounds)
 from ..data.synthetic import Dataset
 from ..optim import Optimizer, sgd
-from .state import FLState, subset_aggregate
+from .faults import apply_faults, corrupt_deltas, init_fault_state
+from .state import (FLState, guarded_subset_aggregate, subset_aggregate)
 
 #: number of times the participant-shaped training program has been traced.
 #: Shapes depend only on (bucket, T, model), so a K-sweep sharing a bucket
@@ -69,6 +71,25 @@ TRAIN_TRACE_COUNT = 0
 
 def train_trace_count() -> int:
     return TRAIN_TRACE_COUNT
+
+
+#: process-wide one-shot flag for the bucket-spill warning (a long sweep
+#: that overflows every call should not drown the log).
+_SPILL_WARNED = False
+
+
+def _warn_spill_once(bucket: int, grown: int, realized: int) -> None:
+    global _SPILL_WARNED
+    if _SPILL_WARNED:
+        return
+    _SPILL_WARNED = True
+    warnings.warn(
+        f"participant bucket overflow: a round realized {realized} "
+        f"transmitters > bucket {bucket}; spilling — regrowing the bucket "
+        f"to {grown} and rerunning phase A (exact, but recompiles phase A "
+        "and the training program). Pass SimConfig(participant_bucket=...) "
+        "with more headroom, or overflow='error' to fail instead.",
+        RuntimeWarning, stacklevel=3)
 
 
 class _DecisionView(NamedTuple):
@@ -81,12 +102,19 @@ class _DecisionView(NamedTuple):
 
 class ParticipationTrace(NamedTuple):
     """Phase A per-round outputs (leading axis T after the scan) — all
-    participant-sized except the scalar overflow counter."""
+    participant-sized except the scalar overflow counter.  Compaction is
+    always over the *decision* mask (autonomous Bernoulli draws + Δ_k
+    forcing); the fault pipeline's outcomes ride along per participant, so
+    phase B can drop lost uploads and corrupt/guard the delivered ones
+    without any [K]-shaped array."""
 
     part_idx: jax.Array     # [P] int32 transmitting ids, padded with K
     valid: jax.Array        # [P] bool
     anchor_slot: jax.Array  # [P] int32 history slot of each anchor
-    e_p: jax.Array          # [P] f32 Joules (eq. 5)
+    e_p: jax.Array          # [P] f32 Joules (eq. 5, incl. retry energy)
+    delivered: jax.Array    # [P] bool — upload survived the fault pipeline
+    corrupt: jax.Array      # [P] bool — delivered but adversarially mangled
+    stale: jax.Array        # [P] int32 staleness Δτ at transmission time
     n_tx: jax.Array         # int32 realized transmitter count (overflow check)
 
 
@@ -110,32 +138,58 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
             "the whole horizon before training); policies reading the "
             "simulation state must use the dense engine")
     K = num_clients
+    faults = cfg.faults
+    fparams = faults.params() if faults is not None else None
 
     def program(h_rounds, base_key):
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
         pw_all = jax.vmap(lambda t, h: policy_fn(t, h, None))(ts, h_rounds)
 
         def step(carry, xs):
-            last_tx, anchor_slot, energy = carry
+            if faults is not None:
+                last_tx, anchor_slot, energy, fstate = carry
+            else:
+                last_tx, anchor_slot, energy = carry
             t, h_t, probs, w = xs
             view = _DecisionView(round=t, last_tx=last_tx)
             mask, forced, w, e_round = apply_round_decision(
                 probs, w, t, h_t, view, base_key, cfg, cell, K)
+            # fault pipeline on the same salted streams as the dense engine:
+            # masks above stay untouched, only delivery/energy change
+            if faults is not None:
+                out, fstate = apply_faults(t, base_key, mask, e_round,
+                                           fstate, fparams, faults)
+                delivered, corrupt, e_round = (out.delivered, out.corrupt,
+                                               out.e_round)
+            else:
+                delivered = mask
+                corrupt = jnp.zeros((K,), bool)
             energy = energy + e_round
             idx, valid, n_tx = participants_from_mask(mask, bucket)
             kc = jnp.clip(idx, 0, K - 1)
             slot_p = jnp.where(valid, anchor_slot[kc], 0)
             e_p = jnp.where(valid, e_round[kc], 0.0)
-            last_tx = jnp.where(mask > 0, t, last_tx)
-            anchor_slot = jnp.where(mask > 0, t + 1, anchor_slot)
-            return ((last_tx, anchor_slot, energy),
-                    ParticipationTrace(idx, valid, slot_p, e_p, n_tx))
+            del_p = valid & (delivered[kc] > 0)
+            cor_p = valid & corrupt[kc]
+            stale_p = jnp.where(valid, t - last_tx[kc], 0)
+            # the server's ledgers advance on *delivered* uploads (the dense
+            # engine broadcasts to the delivered set) — a lost upload leaves
+            # last_tx/anchor untouched, so its staleness keeps growing
+            last_tx = jnp.where(delivered > 0, t, last_tx)
+            anchor_slot = jnp.where(delivered > 0, t + 1, anchor_slot)
+            carry = ((last_tx, anchor_slot, energy, fstate)
+                     if faults is not None
+                     else (last_tx, anchor_slot, energy))
+            return carry, ParticipationTrace(idx, valid, slot_p, e_p,
+                                             del_p, cor_p, stale_p, n_tx)
 
         carry0 = (jnp.zeros((K,), jnp.int32), jnp.zeros((K,), jnp.int32),
                   jnp.zeros((K,), jnp.float32))
-        (last_tx, _, energy), tr = jax.lax.scan(
+        if faults is not None:
+            carry0 = carry0 + (init_fault_state(K),)
+        final, tr = jax.lax.scan(
             step, carry0, (ts, h_rounds, pw_all[0], pw_all[1]))
-        return last_tx, energy, tr
+        return final[0], final[2], tr
 
     return program
 
@@ -156,31 +210,50 @@ def _train_cache_key(cfg, opt_token, loss_fn, acc_fn, params, sample_shape,
     treedef = str(jax.tree_util.tree_structure(params))
     return (bucket, cfg.rounds, cfg.local_iters, cfg.batch_size,
             cfg.eval_every, opt_token, id(loss_fn), id(acc_fn), treedef,
-            shapes, tuple(sample_shape), tuple(test_shape))
+            shapes, tuple(sample_shape), tuple(test_shape),
+            repr(cfg.faults), repr(cfg.guards))
 
 
 def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
                                opt: Optimizer, cfg) -> Callable:
     """Phase B: ``(params, xb [T,P,L,B,...], yb, valid [T,P], slot [T,P],
-    num_clients, test_x, test_y) -> (global, (acc, loss, did_eval)[T])``.
+    num_clients, test_x, test_y[, delivered, corrupt, stale]) ->
+    (global, (acc, loss, did_eval)[T])``.
 
     No array in this program carries a K-sized axis: the carry is the
     global-model history ``[T+1, D]``, training runs over the ``[P, ...]``
     bucket, and the 1/K averaging receives the population as a traced
     scalar.  Tracing it bumps :data:`TRAIN_TRACE_COUNT`.
+
+    The trailing optional operands are the fault pipeline's per-participant
+    outcomes from phase A: lost uploads aggregate with weight 0, corrupt
+    flags drive :func:`~repro.fl.faults.corrupt_deltas`, and staleness feeds
+    the defensive :func:`~repro.fl.state.guarded_subset_aggregate` when
+    ``cfg.guards`` is active.  Omitted (the faults-off call) they default to
+    ``delivered = valid`` / no corruption — the pre-robustness program.
     """
     from .engine import make_local_train  # deferred: engine imports us
 
     vtrain = make_local_train(loss_fn, opt)
     T = cfg.rounds
+    faults = cfg.faults
+    guards = cfg.guards
+    fparams = faults.params() if faults is not None else None
 
     def program(params, xb_all, yb_all, valid_all, slot_all, num_clients,
-                test_x, test_y):
+                test_x, test_y, delivered_all=None, corrupt_all=None,
+                stale_all=None):
         global TRAIN_TRACE_COUNT
         TRAIN_TRACE_COUNT += 1
         hist0 = jax.tree_util.tree_map(
             lambda p: jnp.zeros((T + 1,) + p.shape, p.dtype).at[0].set(p),
             params)
+        if delivered_all is None:
+            delivered_all = valid_all
+        if corrupt_all is None:
+            corrupt_all = jnp.zeros(valid_all.shape, bool)
+        if stale_all is None:
+            stale_all = jnp.zeros(valid_all.shape, jnp.int32)
 
         def eval_now(p):
             return (jnp.asarray(acc_fn(p, test_x, test_y), jnp.float32),
@@ -191,13 +264,19 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
             return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
 
         def step(hist, xs):
-            t, xb, yb, valid, slot = xs
+            t, xb, yb, valid, slot, deliv, corr, stale = xs
             g_t = jax.tree_util.tree_map(lambda h: h[t], hist)
             anchors = jax.tree_util.tree_map(lambda h: h[slot], hist)
             trained = vtrain(anchors, xb, yb)
             deltas = jax.tree_util.tree_map(lambda a, b: a - b, trained,
                                             anchors)
-            g_new = subset_aggregate(g_t, deltas, valid, num_clients)
+            if faults is not None:
+                deltas = corrupt_deltas(deltas, corr, fparams, faults)
+            if guards is not None and guards.active:
+                g_new = guarded_subset_aggregate(g_t, deltas, deliv,
+                                                 num_clients, stale, guards)
+            else:
+                g_new = subset_aggregate(g_t, deltas, deliv, num_clients)
             hist = jax.tree_util.tree_map(
                 lambda h, g: h.at[t + 1].set(g), hist, g_new)
             do_eval = jnp.logical_or(t % cfg.eval_every == 0, t == T - 1)
@@ -206,7 +285,8 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
 
         ts = jnp.arange(T, dtype=jnp.int32)
         hist, traces = jax.lax.scan(
-            step, hist0, (ts, xb_all, yb_all, valid_all, slot_all))
+            step, hist0, (ts, xb_all, yb_all, valid_all, slot_all,
+                          delivered_all, corrupt_all, stale_all))
         g_final = jax.tree_util.tree_map(lambda h: h[T], hist)
         return g_final, traces
 
@@ -272,6 +352,13 @@ def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
         raise ValueError(
             "sparse participation samples minibatches per participant and "
             "needs the per-client stream: set SimConfig(data_stream='client')")
+    if cfg.overflow not in ("spill", "error"):
+        raise ValueError(f"unknown overflow policy {cfg.overflow!r} "
+                         "(expected spill|error)")
+    if cfg.eval_mode == "replay":
+        raise ValueError(
+            "the sparse path evaluates in-scan; eval_mode='replay' belongs "
+            "to the resumable dense driver (repro.fl.resume)")
     data_key = data_stream_key(cfg.seed)
     test_x = test_ds.x[: cfg.eval_batch]
     test_y = test_ds.y[: cfg.eval_batch]
@@ -280,21 +367,36 @@ def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
     gather = jax.jit(lambda pidx: gather_participant_rounds(
         store, data_key, pidx, cfg.local_iters, cfg.batch_size))
 
+    def _phase_a(bucket: int, h_rounds, key):
+        if bucket not in phase_a:
+            phase_a[bucket] = jax.jit(build_participation_program(
+                policy_fn, cfg, cell, K, bucket))
+        return phase_a[bucket](h_rounds, key)
+
     def runner(params, h_all, seed: int | None = None) -> SimResult:
         key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
         h_rounds = jnp.swapaxes(h_all, 0, 1)
         bucket = cfg.participant_bucket or _auto_bucket(policy_fn, h_rounds,
                                                         cfg, K)
-        if bucket not in phase_a:
-            phase_a[bucket] = jax.jit(build_participation_program(
-                policy_fn, cfg, cell, K, bucket))
-        last_tx, energy, ptr = phase_a[bucket](h_rounds, key)
+        last_tx, energy, ptr = _phase_a(bucket, h_rounds, key)
         n_tx = np.asarray(ptr.n_tx)
         if (n_tx > bucket).any():
-            raise RuntimeError(
-                f"participant bucket overflow: round {int(n_tx.argmax())} "
-                f"realized {int(n_tx.max())} transmitters > bucket {bucket} "
-                "— pass SimConfig(participant_bucket=...) with more headroom")
+            if cfg.overflow == "error":
+                raise RuntimeError(
+                    f"participant bucket overflow: round "
+                    f"{int(n_tx.argmax())} realized {int(n_tx.max())} "
+                    f"transmitters > bucket {bucket} — pass "
+                    "SimConfig(participant_bucket=...) with more headroom")
+            # spill fallback: regrow toward the dense width (next power of
+            # two ≥ the realized max, capped at K) and rerun phase A —
+            # decision math is bucket-independent, so the rerun is exact
+            grown = max(bucket, 1)
+            while grown < int(n_tx.max()):
+                grown *= 2
+            grown = min(grown, K)
+            _warn_spill_once(bucket, grown, int(n_tx.max()))
+            bucket = grown
+            last_tx, energy, ptr = _phase_a(bucket, h_rounds, key)
         xb_all, yb_all = gather(ptr.part_idx)
         train = _cached_train_program(
             _train_cache_key(cfg, opt_token, loss_fn, acc_fn, params,
@@ -302,7 +404,8 @@ def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
             lambda: build_sparse_train_program(loss_fn, acc_fn, opt, cfg))
         g_final, (accs, losses, dids) = train(
             params, xb_all, yb_all, ptr.valid, ptr.anchor_slot,
-            jnp.int32(K), test_x, test_y)
+            jnp.int32(K), test_x, test_y, ptr.delivered, ptr.corrupt,
+            ptr.stale)
 
         # host-side densification of the participant trace (numpy, O(T·K))
         idx = np.asarray(ptr.part_idx)
@@ -318,6 +421,15 @@ def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
         state = FLState(global_params=g_final, client_params=None,
                         anchor_params=None, round=jnp.int32(T),
                         last_tx=last_tx)
+        if cfg.faults is not None:
+            dlv = np.asarray(ptr.delivered)
+            cor = np.asarray(ptr.corrupt)
+            delivered = np.zeros((T, K), np.float32)
+            corrupted = np.zeros((T, K), np.float32)
+            delivered[t_of[val], idx[val]] = dlv[val].astype(np.float32)
+            corrupted[t_of[val], idx[val]] = cor[val].astype(np.float32)
+        else:
+            delivered = corrupted = None
         return SimResult(
             test_acc=np.asarray(accs)[ev],
             test_loss=np.asarray(losses)[ev],
@@ -326,6 +438,8 @@ def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
             energy_timeline=np.cumsum(e_round.sum(axis=1)),
             participation=parts,
             state=state,
+            delivered=delivered,
+            corrupted=corrupted,
         )
 
     runner.store = store

@@ -108,6 +108,135 @@ def subset_aggregate(global_params: Any, deltas_p: Any, valid: jax.Array,
     return jax.tree_util.tree_map(agg, global_params, deltas_p)
 
 
+def finite_rows(deltas: Any) -> jax.Array:
+    """Per-row (client/participant) finiteness of a stacked delta pytree:
+    ``[R] bool``, False when *any* element of the row, in any leaf, is
+    NaN/Inf."""
+    def leaf_ok(d):
+        return jnp.all(jnp.isfinite(d).reshape(d.shape[0], -1), axis=1)
+
+    oks = [leaf_ok(d) for d in jax.tree_util.tree_leaves(deltas)]
+    out = oks[0]
+    for o in oks[1:]:
+        out = out & o
+    return out
+
+
+def update_norms(deltas: Any) -> jax.Array:
+    """Per-row global L2 norm across every leaf of a stacked delta pytree
+    (``[R] f32``).  Non-finite elements contribute 0 so the clip factor of a
+    quarantined row stays well-defined (the row is rejected anyway)."""
+    def leaf_sq(d):
+        d = d.reshape(d.shape[0], -1).astype(jnp.float32)
+        d = jnp.where(jnp.isfinite(d), d, 0.0)
+        return jnp.sum(d * d, axis=1)
+
+    sq = sum(leaf_sq(d) for d in jax.tree_util.tree_leaves(deltas))
+    return jnp.sqrt(sq)
+
+
+def guard_weights(deltas: Any, staleness: jax.Array, guards) -> tuple:
+    """Defensive per-row weights + sanitized deltas for aggregation.
+
+    ``guards`` is a :class:`repro.fl.faults.GuardConfig`.  Returns
+    ``(weights [R] f32, deltas')`` where the effective aggregation mask is
+    ``mask · weights``:
+
+    * quarantine: non-finite rows get weight 0 **and** are zeroed in
+      ``deltas'`` (``0 · NaN = NaN`` — masking alone cannot reject them);
+    * norm clip: finite rows are scaled by ``min(1, clip/‖δ‖)`` — folded
+      into the weight, the deltas themselves are untouched;
+    * staleness: ``(1 + Δτ)^{-power}`` down-weighting and the optional hard
+      cap Δτ ≤ ``staleness_cap``.
+
+    Every defense is a pure per-row scalar, so the weights compose with any
+    float participation mask and ride the same fused aggregation kernels.
+    """
+    rows = staleness.shape[0]
+    w = jnp.ones((rows,), jnp.float32)
+    out = deltas
+    if guards.quarantine:
+        ok = finite_rows(deltas)
+        w = w * ok.astype(jnp.float32)
+
+        def zap(d):
+            m = ok.reshape((-1,) + (1,) * (d.ndim - 1))
+            return jnp.where(m, d, jnp.zeros_like(d))
+
+        out = jax.tree_util.tree_map(zap, deltas)
+    if guards.clip_norm is not None:
+        n = update_norms(deltas)
+        w = w * jnp.minimum(1.0, guards.clip_norm / jnp.maximum(n, 1e-30))
+    if guards.staleness_power != 0.0:
+        s = staleness.astype(jnp.float32)
+        w = w * (1.0 + jnp.maximum(s, 0.0)) ** (-guards.staleness_power)
+    if guards.staleness_cap is not None:
+        w = w * (staleness <= guards.staleness_cap).astype(jnp.float32)
+    return w, out
+
+
+def guarded_aggregate(global_params: Any, deltas: Any, mask: jax.Array,
+                      num_clients, staleness: jax.Array, guards,
+                      use_pallas: bool | None = None) -> Any:
+    """Eq. (3) with server-side defenses: x ← x + (1/K) Σ_k m_k·g_k·δ_k.
+
+    ``guards=None`` (or an all-off config) routes straight to
+    :func:`masked_aggregate` — bit-identical to the undefended path.  On TPU
+    the quarantine runs *inside* the fused kernel
+    (``kernels.ops.fl_aggregate_guarded``: non-finite elements are zeroed in
+    VMEM, no sanitized [K, D] copy is ever materialized in HBM).
+    """
+    if guards is None or not guards.active:
+        return masked_aggregate(global_params, deltas, mask, num_clients,
+                                use_pallas=use_pallas)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    w, safe = guard_weights(deltas, staleness, guards)
+    m = mask.astype(jnp.float32) * w
+    if use_pallas:
+        from ..kernels import ops
+        inv = 1.0 / jnp.asarray(num_clients, jnp.float32)
+
+        def agg_k(g, d):
+            out = ops.fl_aggregate_guarded(g.reshape(-1),
+                                           d.reshape(d.shape[0], -1),
+                                           m * inv)
+            return out.reshape(g.shape).astype(g.dtype)
+
+        # the kernel zeroes non-finite elements itself — pass raw deltas
+        return jax.tree_util.tree_map(agg_k, global_params, deltas)
+    return masked_aggregate(global_params, safe, m, num_clients,
+                            use_pallas=False)
+
+
+def guarded_subset_aggregate(global_params: Any, deltas_p: Any,
+                             valid: jax.Array, num_clients,
+                             staleness_p: jax.Array, guards,
+                             use_pallas: bool | None = None) -> Any:
+    """Participant-subset form of :func:`guarded_aggregate` (sparse path):
+    rows are the padded transmitting bucket, ``num_clients`` may be traced."""
+    if guards is None or not guards.active:
+        return subset_aggregate(global_params, deltas_p, valid, num_clients,
+                                use_pallas=use_pallas)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    w, safe = guard_weights(deltas_p, staleness_p, guards)
+    v = valid.astype(jnp.float32) * w
+    if use_pallas:
+        from ..kernels import ops
+        inv = 1.0 / jnp.asarray(num_clients, jnp.float32)
+
+        def agg_k(g, d):
+            out = ops.fl_aggregate_guarded(g.reshape(-1),
+                                           d.reshape(d.shape[0], -1),
+                                           v * inv)
+            return out.reshape(g.shape).astype(g.dtype)
+
+        return jax.tree_util.tree_map(agg_k, global_params, deltas_p)
+    return subset_aggregate(global_params, safe, v, num_clients,
+                            use_pallas=False)
+
+
 def broadcast_to_participants(state: FLState, new_global: Any,
                               mask: jax.Array) -> FLState:
     """Protocol Step 5: participants receive x_t (both x_k and y_k reset)."""

@@ -24,18 +24,26 @@ BLOCK_R = 64
 LANE = 128
 
 
-def _kernel(mask_ref, global_ref, deltas_ref, out_ref, *, inv_k: float):
+def _kernel(mask_ref, global_ref, deltas_ref, out_ref, *, inv_k: float,
+            guard: bool):
     d = deltas_ref[...].astype(jnp.float32)          # [K, BR, 128]
+    if guard:
+        # non-finite quarantine, fused: a rejected row arrives with mask 0,
+        # but 0 · NaN = NaN — zero the poison in VMEM so the zero weight
+        # actually rejects it.  One extra VPU pass over data already
+        # resident; no sanitized [K, M] copy ever exists in HBM.
+        d = jnp.where(jnp.isfinite(d), d, 0.0)
     m = mask_ref[...].astype(jnp.float32)            # [K, 1]
     agg = jnp.sum(d * m[:, :, None], axis=0) * inv_k  # [BR, 128]
     out_ref[...] = (global_ref[...].astype(jnp.float32)
                     + agg).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "denom"))
+@functools.partial(jax.jit, static_argnames=("interpret", "denom", "guard"))
 def fl_aggregate(global_p: jax.Array, deltas: jax.Array, mask: jax.Array,
                  interpret: bool = True,
-                 denom: int | None = None) -> jax.Array:
+                 denom: int | None = None,
+                 guard: bool = False) -> jax.Array:
     """global_p: [M]; deltas: [R, M]; mask: [R] → updated global [M].
 
     ``R`` is the *row* count of the delta block — the full population K in
@@ -45,6 +53,11 @@ def fl_aggregate(global_p: jax.Array, deltas: jax.Array, mask: jax.Array,
     population.  The sparse path passes ``deltas: [P, M]`` for the gathered
     transmitting set with ``mask`` = its validity lanes and ``denom=K``, so
     one compiled kernel shape serves every population size sharing a bucket.
+
+    ``guard=True`` zeroes non-finite delta elements inside the kernel
+    (defensive aggregation: a quarantined row carries mask 0, and in-VMEM
+    sanitization keeps its NaN/Inf from poisoning the reduction).  The
+    default ``False`` path is byte-identical to the pre-guard kernel.
 
     M is padded to a (BLOCK_R·128) multiple internally.
     """
@@ -57,7 +70,7 @@ def fl_aggregate(global_p: jax.Array, deltas: jax.Array, mask: jax.Array,
     grid = (Mp // tile,)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, inv_k=inv_k),
+        functools.partial(_kernel, inv_k=inv_k, guard=guard),
         grid=grid,
         in_specs=[
             pl.BlockSpec((R, 1), lambda i: (0, 0)),

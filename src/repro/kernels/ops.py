@@ -43,6 +43,23 @@ def fl_aggregate_subset(global_p, deltas, valid, num_clients,
     return ref.fl_aggregate_subset_ref(global_p, deltas, valid, num_clients)
 
 
+def fl_aggregate_guarded(global_p, deltas, weights,
+                         use_pallas: bool | None = None):
+    """Defensively-weighted eq. (3): ``out = global + Σ_r w_r · sanitize(δ_r)``.
+
+    ``weights`` is the fully-folded per-row coefficient (participation mask ×
+    guard weights × 1/K) — the caller owns the averaging semantics; non-finite
+    delta elements are zeroed *inside* the reduction, so a quarantined row
+    (weight 0) cannot poison the global model.  Pallas path fuses the
+    sanitize into the VMEM pass (no [R, M] sanitized copy in HBM)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _fl_aggregate_pallas(global_p, deltas, weights,
+                                    interpret=not _on_tpu(), denom=1,
+                                    guard=True)
+    return ref.fl_aggregate_guarded_ref(global_p, deltas, weights)
+
+
 def flash_attention(q, k, v, causal=True, window=None,
                     use_pallas: bool | None = None):
     use = _on_tpu() if use_pallas is None else use_pallas

@@ -31,6 +31,21 @@ def fl_aggregate_subset_ref(global_p: jax.Array, deltas: jax.Array,
     return (global_p.astype(jnp.float32) + agg).astype(global_p.dtype)
 
 
+def fl_aggregate_guarded_ref(global_p: jax.Array, deltas: jax.Array,
+                             weights: jax.Array) -> jax.Array:
+    """Defensively-weighted eq. (3) oracle: out = global + Σ_r w_r·δ'_r with
+    δ' = δ where finite else 0.
+
+    global_p: [M]; deltas: [R, M]; weights: [R] — the caller folds the
+    participation mask, guard weights and the 1/K denominator into
+    ``weights`` (matching the ``denom=1`` kernel contract).
+    """
+    d = deltas.astype(jnp.float32)
+    d = jnp.where(jnp.isfinite(d), d, 0.0)
+    agg = jnp.sum(d * weights.astype(jnp.float32)[:, None], axis=0)
+    return (global_p.astype(jnp.float32) + agg).astype(global_p.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True,
                         window: int | None = None) -> jax.Array:

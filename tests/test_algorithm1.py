@@ -129,6 +129,47 @@ def test_p4_bisection_matches_subgradient():
     assert np.allclose(w_b, w_s, atol=0.05)
 
 
+@pytest.mark.parametrize("rho,expect", [(0.0, "lam"), (1.0, "one")])
+def test_online_boundary_rho_finite_and_clipped(rho, expect):
+    """ρ = 0 kills the convergence term (p collapses to the floor λ);
+    ρ = 1 kills the energy term (p saturates at 1). Both endpoints used to
+    divide by (1 − ρ) and emit NaN — now they return finite clipped p."""
+    spec, h = make_instance(rho=rho)
+    res = solve_online(h[:, 0], spec)
+    p = np.asarray(res.p)
+    assert np.isfinite(p).all()
+    want = spec.lam if expect == "lam" else 1.0
+    np.testing.assert_allclose(p, want, atol=1e-4)
+
+
+def test_online_vmappable_over_rho_grid_with_endpoints():
+    """The hardened solver stays finite under vmap across a ρ grid that
+    includes both degenerate endpoints — the fault-matrix sweep relies on
+    this shape of batching."""
+    cell = CellConfig(num_clients=6)
+    spec = ProblemSpec(cell=cell, rho=0.5, lam=0.05, num_rounds=20)
+    pos = sample_positions(jax.random.PRNGKey(5), cell)
+    h = channel_gains(jax.random.PRNGKey(6), pos, 1).T[:, 0]
+
+    rhos = jnp.array([0.0, 0.25, 0.5, 0.75, 1.0])
+    ps = jax.vmap(lambda r: solve_online(h, spec, rho=r).p)(rhos)
+    ps = np.asarray(ps)
+    assert np.isfinite(ps).all()
+    assert np.all(ps >= 0.05 - 1e-5) and np.all(ps <= 1.0 + 1e-5)
+
+
+def test_online_alpha_floor_does_not_blow_up():
+    """Near-zero effective step/α regimes (tiny λ, tiny gains) must keep the
+    closed-form p* denominator off zero: probabilities stay in [λ, 1]."""
+    cell = CellConfig(num_clients=4)
+    spec = ProblemSpec(cell=cell, rho=0.5, lam=1e-6, num_rounds=5)
+    h = jnp.full((4,), 1e-20)  # pathologically weak channels
+    res = solve_online(h, spec)
+    p = np.asarray(res.p)
+    assert np.isfinite(p).all()
+    assert np.all(p >= spec.lam - 1e-9) and np.all(p <= 1.0 + 1e-6)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(min_value=0, max_value=10_000),
        st.floats(min_value=0.01, max_value=0.5))

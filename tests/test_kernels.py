@@ -51,6 +51,38 @@ def test_fl_aggregate_property(K, M):
     np.testing.assert_allclose(np.asarray(out), 2.0, atol=1e-6)
 
 
+@pytest.mark.parametrize("M", [128, 8193, 77])
+def test_fl_aggregate_guard_zeroes_nonfinite(M):
+    """guard=True quarantines NaN/Inf elements inside the kernel — the
+    result matches the sanitizing oracle and never goes non-finite."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (M,))
+    d = jax.random.normal(jax.random.PRNGKey(1), (4, M))
+    d = d.at[1].set(jnp.nan).at[2, 0].set(jnp.inf)
+    w = jnp.array([0.25, 0.25, 0.0, 0.25])
+    out = fl_aggregate(g, d, w, interpret=True, denom=1, guard=True)
+    want = ref.fl_aggregate_guarded_ref(g, d, w)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               **TOL[jnp.float32])
+
+
+def test_fl_aggregate_guard_off_propagates_nan():
+    """Without the guard a poisoned row does reach the output — the
+    regression that makes quarantine necessary."""
+    g = jnp.zeros((128,))
+    d = jnp.zeros((2, 128)).at[0].set(jnp.nan)
+    out = fl_aggregate(g, d, jnp.ones((2,)), interpret=True)
+    assert np.isnan(np.asarray(out)).any()
+
+
+def test_fl_aggregate_guarded_ref_matches_manual():
+    g = jnp.ones((5,))
+    d = jnp.stack([jnp.full((5,), 2.0), jnp.full((5,), jnp.nan)])
+    w = jnp.array([0.5, 0.5])
+    out = ref.fl_aggregate_guarded_ref(g, d, w)
+    np.testing.assert_allclose(np.asarray(out), 2.0)  # 1 + 0.5·2 + 0.5·0
+
+
 # ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------

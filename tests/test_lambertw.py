@@ -30,6 +30,19 @@ def test_nan_outside_domain():
     assert np.isnan(float(lambertw(jnp.array(-0.5))))
 
 
+def test_branch_point_fp_noise_clamps_not_nan():
+    """Callers build -exp(-A) in float32; rounding can land a few ulp below
+    -1/e.  Within BRANCH_TOL the argument snaps to the branch point (W = -1)
+    instead of poisoning the caller with NaN; genuinely out-of-domain
+    arguments still return NaN."""
+    from repro.core.lambertw import BRANCH_TOL
+
+    for eps in (1e-9, 1e-8, 1e-7, BRANCH_TOL * 0.9):
+        w = float(lambertw(jnp.float32(-INV_E - eps)))
+        assert np.isclose(w, -1.0, atol=1e-6), (eps, w)
+    assert np.isnan(float(lambertw(jnp.array(-INV_E - 1e-3))))
+
+
 @settings(max_examples=60, deadline=None)
 @given(st.floats(min_value=-INV_E + 1e-6, max_value=100.0,
                  allow_nan=False, allow_infinity=False))

@@ -1,0 +1,160 @@
+"""Resumable scans: chunked segments == one monolithic scan bit-wise,
+kill-and-resume reproduces the uninterrupted run exactly (faults included),
+replay-mode post-hoc evals, and the checkpoint-directory guard rails."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CellConfig
+from repro.core.channel import channel_gains, sample_positions
+from repro.core.selection import RandomScheme
+from repro.data import make_mnist_like, shard_noniid
+from repro.data.synthetic import Dataset
+from repro.fl import (FaultConfig, GuardConfig, SimConfig, run_resumable,
+                      run_simulation, segment_bounds)
+from repro.fl.resume import completed_segments
+from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
+
+DIM = 64
+K, T = 5, 12
+
+
+def tiny_world():
+    tr, te = make_mnist_like(jax.random.PRNGKey(0), n_train=1000, n_test=300)
+    clients = shard_noniid(jax.random.PRNGKey(1), tr, K, d=2)
+    clients = [Dataset(c.x[:, :DIM], c.y, c.num_classes) for c in clients]
+    te = Dataset(te.x[:, :DIM], te.y, te.num_classes)
+    cell = CellConfig(num_clients=K)
+    pos = sample_positions(jax.random.PRNGKey(2), cell)
+    h = channel_gains(jax.random.PRNGKey(3), pos, T).T
+    params = init_mlp(jax.random.PRNGKey(4), dims=(DIM, 24, 10))
+    return clients, te, cell, h, params
+
+
+BASE = dict(rounds=T, local_iters=1, batch_size=8, eval_every=4,
+            eval_batch=200, data_path="device")
+POLICY = RandomScheme(p_bar=0.5, num_clients=K)
+
+
+def leaves_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_segment_bounds_cover_the_horizon():
+    assert segment_bounds(10, 4) == [(0, 4), (4, 8), (8, 10)]
+    assert segment_bounds(8, 4) == [(0, 4), (4, 8)]
+    assert segment_bounds(3, 100) == [(0, 3)]
+
+
+def test_chunked_equals_single_scan(tmp_path):
+    """Segmenting the horizon changes neither PRNG streams nor op order:
+    the resumable driver's result is bit-identical to the monolithic scan."""
+    clients, te, cell, h, params = tiny_world()
+    cfg = SimConfig(**BASE, checkpoint_every=5)
+    whole = run_simulation(params, mlp_loss, mlp_accuracy, clients, te,
+                           POLICY, h, cell, cfg)
+    seg = run_resumable(params, mlp_loss, mlp_accuracy, clients, te, POLICY,
+                        h, cell, cfg, str(tmp_path))
+    leaves_equal(whole.state.global_params, seg.state.global_params)
+    np.testing.assert_array_equal(whole.eval_rounds, seg.eval_rounds)
+    np.testing.assert_allclose(whole.test_acc, seg.test_acc)
+    np.testing.assert_allclose(whole.energy_per_client,
+                               seg.energy_per_client, rtol=1e-6)
+    np.testing.assert_array_equal(whole.participation, seg.participation)
+
+
+def test_kill_and_resume_reproduces_exactly(tmp_path):
+    """Stop after one committed segment (the simulated kill), resume in a
+    fresh call: final params match the uninterrupted run bit-for-bit —
+    faults, guards and all."""
+    clients, te, cell, h, params = tiny_world()
+    cfg = SimConfig(**BASE, checkpoint_every=4,
+                    faults=FaultConfig(p_loss=0.3, max_retries=1,
+                                       p_corrupt=0.3, corrupt_mode="nan"),
+                    guards=GuardConfig(quarantine=True, clip_norm=10.0))
+    whole = run_simulation(params, mlp_loss, mlp_accuracy, clients, te,
+                           POLICY, h, cell, cfg)
+    killed = run_resumable(params, mlp_loss, mlp_accuracy, clients, te,
+                           POLICY, h, cell, cfg, str(tmp_path),
+                           stop_after_segment=1)
+    assert killed is None
+    assert completed_segments(str(tmp_path), len(segment_bounds(T, 4))) == 1
+    resumed = run_resumable(params, mlp_loss, mlp_accuracy, clients, te,
+                            POLICY, h, cell, cfg, str(tmp_path))
+    leaves_equal(whole.state.global_params, resumed.state.global_params)
+    np.testing.assert_array_equal(whole.delivered, resumed.delivered)
+    np.testing.assert_array_equal(whole.corrupted, resumed.corrupted)
+    np.testing.assert_allclose(whole.test_acc, resumed.test_acc)
+
+
+def test_resume_skips_completed_segments(tmp_path):
+    """A second call on a finished directory re-runs nothing (all markers
+    present) and still reassembles the full result."""
+    clients, te, cell, h, params = tiny_world()
+    cfg = SimConfig(**BASE, checkpoint_every=4)
+    first = run_resumable(params, mlp_loss, mlp_accuracy, clients, te,
+                          POLICY, h, cell, cfg, str(tmp_path))
+    n_seg = len(segment_bounds(T, 4))
+    assert completed_segments(str(tmp_path), n_seg) == n_seg
+    again = run_resumable(params, mlp_loss, mlp_accuracy, clients, te,
+                          POLICY, h, cell, cfg, str(tmp_path))
+    leaves_equal(first.state.global_params, again.state.global_params)
+    np.testing.assert_allclose(first.test_acc, again.test_acc)
+
+
+def test_replay_eval_mode_boundary_checkpoints(tmp_path):
+    """eval_mode='replay' removes the in-scan lax.cond eval; the strided
+    post-hoc evals land on segment boundaries and the final params match the
+    inscan engine bit-wise."""
+    clients, te, cell, h, params = tiny_world()
+    inscan = run_simulation(params, mlp_loss, mlp_accuracy, clients, te,
+                            POLICY, h, cell, SimConfig(**BASE))
+    cfg = SimConfig(**BASE, eval_mode="replay", checkpoint_every=4)
+    rep = run_resumable(params, mlp_loss, mlp_accuracy, clients, te, POLICY,
+                        h, cell, cfg, str(tmp_path))
+    leaves_equal(inscan.state.global_params, rep.state.global_params)
+    np.testing.assert_array_equal(rep.eval_rounds, [3, 7, 11])
+    assert np.isfinite(rep.test_acc).all()
+    # the last boundary is the final model — its eval must agree with the
+    # inscan engine's final-round eval
+    np.testing.assert_allclose(rep.test_acc[-1], inscan.test_acc[-1],
+                               atol=1e-6)
+
+
+def test_fingerprint_mismatch_rejected(tmp_path):
+    clients, te, cell, h, params = tiny_world()
+    cfg = SimConfig(**BASE, checkpoint_every=4)
+    run_resumable(params, mlp_loss, mlp_accuracy, clients, te, POLICY, h,
+                  cell, cfg, str(tmp_path), stop_after_segment=1)
+    other = SimConfig(**{**BASE, "seed": 99}, checkpoint_every=4)
+    with pytest.raises(ValueError, match="different run"):
+        run_resumable(params, mlp_loss, mlp_accuracy, clients, te, POLICY,
+                      h, cell, other, str(tmp_path))
+
+
+def test_prestack_path_cannot_resume(tmp_path):
+    clients, te, cell, h, params = tiny_world()
+    cfg = SimConfig(**{**BASE, "data_path": "prestack"}, checkpoint_every=4)
+    with pytest.raises(ValueError, match="prestack"):
+        run_resumable(params, mlp_loss, mlp_accuracy, clients, te, POLICY,
+                      h, cell, cfg, str(tmp_path))
+
+
+def test_marker_gap_truncates_restore(tmp_path):
+    """A missing .done marker ends the committed prefix: later orphan
+    segments are rerun, and the result is still exact."""
+    clients, te, cell, h, params = tiny_world()
+    cfg = SimConfig(**BASE, checkpoint_every=4)
+    whole = run_resumable(params, mlp_loss, mlp_accuracy, clients, te,
+                          POLICY, h, cell, cfg, str(tmp_path))
+    os.remove(os.path.join(str(tmp_path), "seg_00001.done"))
+    n_seg = len(segment_bounds(T, 4))
+    assert completed_segments(str(tmp_path), n_seg) == 1
+    redone = run_resumable(params, mlp_loss, mlp_accuracy, clients, te,
+                           POLICY, h, cell, cfg, str(tmp_path))
+    leaves_equal(whole.state.global_params, redone.state.global_params)

@@ -170,10 +170,13 @@ def test_sparse_explicit_raises_on_bad_config():
 
 
 def test_bucket_overflow_is_a_hard_error():
+    """overflow="error" keeps the legacy hard failure (the default "spill"
+    regrows the bucket and reruns — tests/test_faults.py covers that)."""
     world = mnist_world(rounds=6)
     clients, te, cell, h, params = world
     cfg = SimConfig(rounds=6, local_iters=1, batch_size=8, eval_batch=200,
-                    **SPARSE_KW, participation="sparse", participant_bucket=4)
+                    **SPARSE_KW, participation="sparse", participant_bucket=4,
+                    overflow="error")
     runner = make_runner(mlp_loss, mlp_accuracy, clients, te,
                          RandomScheme(p_bar=1.0, num_clients=8), cell, cfg)
     with pytest.raises(RuntimeError, match="bucket overflow"):
