@@ -26,7 +26,7 @@ SUITES = [
     ("bench_staleness", bench_staleness.main),
     ("fig2_3_rho_sweep", fig2_3_rho_sweep.main),
     ("fig4_5_energy", fig4_5_energy.main),
-    ("fig6_7_schemes", fig6_7_schemes.main),
+    ("fig6_7_schemes", lambda: fig6_7_schemes.main(["--quick"])),
     ("fig8_9_scenarios", fig8_9_scenarios.main),
 ]
 

@@ -1,5 +1,12 @@
-"""Client-selection policies: the paper's proposed scheme and its three
-benchmarks (§V-A): Random, Greedy (top-k channel gain), Age-based (round-robin).
+"""Client-selection policies: the paper's proposed scheme, its three §V-A
+benchmarks (Random, Greedy top-k gain, Age-based round-robin), and the
+related-work baselines for the head-to-head scheme matrix — CSMAAFL-style
+channel-aware contention (:func:`csma_policy`, arXiv:2306.01207) and
+Hu–Chen–Larsson max-age scheduling (:func:`age_aware_policy`,
+arXiv:2212.07356; a *ledger* policy — see :func:`_ledger`).  Their staleness-
+aware aggregation counterparts live in :mod:`repro.fl.state`
+(``AggregatorConfig``), and :mod:`repro.fl.schemes` pairs the two into named
+schemes.
 
 Two layers live here:
 
@@ -106,6 +113,30 @@ def _state_free(fn: PolicyFn) -> PolicyFn:
     return fn
 
 
+def _ledger(fn: PolicyFn) -> PolicyFn:
+    """Tag a policy as reading only the *ledger* slice of the simulation
+    state: ``sim_state.round`` and ``sim_state.last_tx`` (the [K] staleness
+    bookkeeping), never the model parameters.
+
+    Ledger policies cannot be hoisted out of the round loop (the ledger is
+    part of the scan carry), but they *can* run in the sparse engine's
+    phase-A participation scan, which carries exactly those two fields
+    (:class:`repro.fl.sparse._DecisionView`) — that is what lets age-aware
+    scheduling à la Hu–Chen–Larsson ride the participant-centric path.  A
+    ledger policy must tolerate ``sim_state=None`` (callers outside a
+    simulation, e.g. :func:`average_participants`, pass the zero-staleness
+    view).
+    """
+    fn.ledger = True
+    return fn
+
+
+def policy_ledger_ok(fn: PolicyFn) -> bool:
+    """True when ``fn`` can run from the ledger alone: it is either fully
+    state-free or tagged :func:`_ledger`."""
+    return getattr(fn, "state_free", False) or getattr(fn, "ledger", False)
+
+
 def random_policy(p_bar: float, num_clients: int) -> PolicyFn:
     """Uniform probability p̄, equal reserved bandwidth (paper benchmark 1)."""
 
@@ -146,6 +177,90 @@ def age_policy(k: int, num_clients: int) -> PolicyFn:
         return probs, w
 
     return _state_free(fn)
+
+
+def csma_policy(k: int, num_clients: int, beta: float = 1.0) -> PolicyFn:
+    """CSMAAFL-style channel-aware contention (arXiv:2306.01207).
+
+    Clients contend for the uplink with a persistence probability shaped by
+    their instantaneous channel: client k's contention share is
+    ``c_k = h_k^β / Σ_j h_j^β`` and it transmits with probability
+    ``p_k = min(k·c_k, 1)`` — in expectation ~``k`` winners per round, biased
+    toward good channels (β = 0 recovers uniform random access, large β
+    approaches greedy).  Bandwidth is reserved proportionally to the
+    expected share, ``w_k = p_k / Σ p``.  Pair with the ``"csmaafl"``
+    aggregator, whose inverse-probability weighting debiases exactly this
+    skew.
+    """
+
+    def fn(t, h_t, state=None):
+        del t, state
+        hp = jnp.maximum(h_t.astype(jnp.float32), 1e-30) ** beta
+        share = hp / jnp.maximum(jnp.sum(hp), 1e-30)
+        probs = jnp.clip(k * share, 0.0, 1.0)
+        w = probs / jnp.maximum(jnp.sum(probs), 1e-30)
+        return probs.astype(h_t.dtype), w.astype(h_t.dtype)
+
+    return _state_free(fn)
+
+
+def age_aware_policy(k: int, num_clients: int,
+                     gamma: float = 1e-3) -> PolicyFn:
+    """Hu–Chen–Larsson age-aware scheduling (arXiv:2212.07356): every round
+    the server schedules the ``k`` clients with the largest age of
+    information Δτ_k = t − last_tx_k, with a small channel-quality
+    tie-break (``gamma`` × the mean-normalized gain — ages are integers, so
+    any ``gamma < 1`` breaks ties by channel without ever overriding a
+    full round of seniority).  Deterministic probs ∈ {0, 1}, equal
+    bandwidth across the scheduled set.
+
+    A *ledger* policy: it reads ``state.round``/``state.last_tx`` only.
+    With ``state=None`` (e.g. :func:`average_participants`) ages are taken
+    as zero and the schedule degenerates to channel-greedy — the
+    cardinality, which is all the participation average sees, is ``k``
+    either way.
+    """
+
+    def fn(t, h_t, state=None):
+        K = num_clients
+        if state is None:
+            stale = jnp.zeros((K,), jnp.float32)
+        else:
+            stale = (state.round - state.last_tx).astype(jnp.float32)
+        tie = h_t.astype(jnp.float32) \
+            / jnp.maximum(jnp.mean(h_t.astype(jnp.float32)), 1e-30)
+        score = stale + gamma * jnp.clip(tie, 0.0, 1e3)
+        idx = jnp.argsort(-score)[:k]
+        probs = jnp.zeros((K,), h_t.dtype).at[idx].set(1.0)
+        w = jnp.zeros((K,), h_t.dtype).at[idx].set(1.0 / k)
+        return probs, w
+
+    return _ledger(fn)
+
+
+def policy_blend(policy_fns, sel: jax.Array) -> PolicyFn:
+    """One-hot blend of a static policy panel: ``(probs, w) = Σ_i sel_i ·
+    policy_i(t, h, state)``.
+
+    ``sel`` is a traced ``[n]`` one-hot vector, so the *scheme* becomes a
+    vmap axis: every lane of ``run_scheme_matrix`` evaluates the whole panel
+    and keeps its own row (0/1 float blending is exact — 1·x + 0·y ≡ x in
+    IEEE arithmetic).  The blend is hoistable only if every member is; it
+    can run from the ledger iff every member can.
+    """
+    fns = list(policy_fns)
+
+    def fn(t, h_t, state=None):
+        outs = [p(t, h_t, state) for p in fns]
+        probs = sum(sel[i] * o[0] for i, o in enumerate(outs))
+        w = sum(sel[i] * o[1] for i, o in enumerate(outs))
+        return probs, w
+
+    if all(getattr(p, "state_free", False) for p in fns):
+        return _state_free(fn)
+    if all(policy_ledger_ok(p) for p in fns):
+        return _ledger(fn)
+    return fn
 
 
 def online_policy(spec: ProblemSpec, rho=None) -> PolicyFn:
@@ -271,6 +386,36 @@ class AgeBasedScheme(_FnPolicy):
 
     def __post_init__(self):
         self.policy_fn = age_policy(self.k, self.num_clients)
+
+
+@dataclasses.dataclass
+class CsmaScheme(_FnPolicy):
+    """Channel-aware contention à la CSMAAFL (arXiv:2306.01207)."""
+
+    k: int
+    num_clients: int
+    beta: float = 1.0
+    name: str = "csma"
+
+    def __post_init__(self):
+        self.policy_fn = csma_policy(self.k, self.num_clients, self.beta)
+
+
+@dataclasses.dataclass
+class AgeAwareScheme(_FnPolicy):
+    """Max-age scheduling à la Hu–Chen–Larsson (arXiv:2212.07356).  The
+    legacy ``decide(t, h_t)`` view has no ledger, so it reports the
+    zero-staleness schedule; inside a simulation the engines feed the live
+    ledger through ``policy_fn``."""
+
+    k: int
+    num_clients: int
+    gamma: float = 1e-3
+    name: str = "age-aware"
+
+    def __post_init__(self):
+        self.policy_fn = age_aware_policy(self.k, self.num_clients,
+                                          self.gamma)
 
 
 def average_participants(policy, h_all: jax.Array) -> float:

@@ -9,15 +9,19 @@ from .faults import (FaultConfig, FaultMatrixResult, FaultOutcome,
                      corrupt_deltas, fault_key, init_fault_state,
                      run_fault_matrix, scale_params)
 from .resume import completed_segments, run_resumable, segment_bounds
+from .schemes import (SchemeMatrixResult, SchemeSpec, default_scheme_panel,
+                      run_scheme_matrix)
 from .simulator import run_simulation, run_simulation_legacy
 from .sparse import (ParticipationTrace, build_participation_program,
                      build_sparse_train_program, make_sparse_runner,
                      resolve_participation, train_trace_count)
-from .state import (FLState, broadcast_to_participants, finite_rows,
-                    guard_weights, guarded_aggregate,
-                    guarded_subset_aggregate, init_fl_state,
-                    masked_aggregate, pseudo_gradients, subset_aggregate,
-                    update_norms)
+from .state import (AggParams, AggregatorConfig, FLState,
+                    broadcast_to_participants, finite_rows, guard_weights,
+                    guarded_aggregate, guarded_subset_aggregate,
+                    init_fl_state, masked_aggregate, pseudo_gradients,
+                    scheme_aggregate, scheme_subset_aggregate, scheme_weights,
+                    staleness_scale, subset_aggregate, update_norms,
+                    weighted_aggregate)
 
 __all__ = ["SimConfig", "SimResult", "run_simulation",
            "run_simulation_legacy", "run_simulation_scan", "build_scan_sim",
@@ -36,4 +40,9 @@ __all__ = ["SimConfig", "SimResult", "run_simulation",
            "corrupt_deltas", "fault_key", "init_fault_state", "scale_params",
            "run_fault_matrix", "finite_rows", "update_norms",
            "guard_weights", "guarded_aggregate", "guarded_subset_aggregate",
-           "run_resumable", "segment_bounds", "completed_segments"]
+           "run_resumable", "segment_bounds", "completed_segments",
+           # scheme matrix (docs/schemes.md)
+           "AggParams", "AggregatorConfig", "SchemeMatrixResult",
+           "SchemeSpec", "default_scheme_panel", "run_scheme_matrix",
+           "scheme_aggregate", "scheme_subset_aggregate", "scheme_weights",
+           "staleness_scale", "weighted_aggregate"]

@@ -46,8 +46,9 @@ from ..data.synthetic import Dataset
 from ..optim import Optimizer, sgd
 from .faults import (FaultConfig, FaultState, GuardConfig, apply_faults,
                      corrupt_deltas, init_fault_state)
-from .state import (FLState, broadcast_to_participants, guarded_aggregate,
-                    init_fl_state, masked_aggregate, pseudo_gradients)
+from .state import (AggregatorConfig, FLState, broadcast_to_participants,
+                    guarded_aggregate, init_fl_state, masked_aggregate,
+                    pseudo_gradients, scheme_aggregate)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +97,13 @@ class SimConfig:
     # bit-identical to the plain eq.-3 update; otherwise non-finite
     # quarantine, norm clipping and staleness down-weighting apply.
     guards: GuardConfig | None = None
+    # aggregation scheme: None keeps the paper's eq.-3 update on the exact
+    # legacy code path (the byte-for-byte bit-parity guarantee); an
+    # AggregatorConfig routes through the pluggable weighted path —
+    # FedAsync-style s(Δτ) mixing, CSMAAFL importance weighting, or
+    # Hu–Chen–Larsson age-aware weighting (docs/schemes.md).  Guards
+    # compose with any scheme.
+    aggregator: AggregatorConfig | None = None
     # eval placement: "inscan" evaluates at eval_every strides via lax.cond
     # inside the scan (both branches execute under vmap); "replay" skips
     # in-scan evals entirely — the resumable driver evaluates its strided
@@ -343,12 +351,13 @@ def _make_round_step(vtrain: Callable, loss_fn: Callable, acc_fn: Callable,
     K = num_clients
     faults = cfg.faults
     guards = cfg.guards
+    agg = cfg.aggregator
     if cfg.eval_mode not in ("inscan", "replay"):
         raise ValueError(f"unknown eval_mode {cfg.eval_mode!r} "
                          "(expected inscan|replay)")
 
     def round_step(carry, t, h_t, xb, yb, pw, base_key, test_x, test_y,
-                   fp=None):
+                   fp=None, ap=None):
         if faults is not None:
             state, energy, fstate = carry
         else:
@@ -388,7 +397,16 @@ def _make_round_step(vtrain: Callable, loss_fn: Callable, acc_fn: Callable,
         deltas = pseudo_gradients(state)
         if faults is not None:
             deltas = corrupt_deltas(deltas, corrupt, fp, faults)
-        if guards is not None and guards.active:
+        if agg is not None:
+            # pluggable scheme path (guards fold in): weights come from the
+            # staleness ledger and the policy's *nominal* probs (pre-boost —
+            # the csmaafl importance weight debiases the policy, not the
+            # aging heuristic layered on top of it)
+            staleness = state.round - state.last_tx
+            new_global = scheme_aggregate(
+                state.global_params, deltas, delivered, K, staleness, probs,
+                agg.params() if ap is None else ap, guards=guards)
+        elif guards is not None and guards.active:
             staleness = state.round - state.last_tx
             new_global = guarded_aggregate(state.global_params, deltas,
                                            delivered, K, staleness, guards)
@@ -491,6 +509,11 @@ def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
             return None
         return cfg.faults.params() if fault_params is None else fault_params
 
+    def _resolve_ap(agg_params):
+        if cfg.aggregator is None:
+            return None
+        return cfg.aggregator.params() if agg_params is None else agg_params
+
     def _scan(params, step, xs):
         carry0 = init_carry(params, K, cfg)
         final, traces = jax.lax.scan(step, carry0, xs)
@@ -499,24 +522,26 @@ def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
 
     if data_mode == "prestack":
         def simulate(params, xb_all, yb_all, h_rounds, base_key, test_x,
-                     test_y, pw_all=None, fault_params=None):
+                     test_y, pw_all=None, fault_params=None, agg_params=None):
             ts_all = jnp.arange(cfg.rounds, dtype=jnp.int32)
             pw_all = _resolve_pw(h_rounds, pw_all)
             fp = _resolve_fp(fault_params)
+            ap = _resolve_ap(agg_params)
 
             def step(carry, xs):
                 t, h_t, xb, yb, pw = xs
                 return round_step(carry, t, h_t, xb, yb, pw, base_key,
-                                  test_x, test_y, fp=fp)
+                                  test_x, test_y, fp=fp, ap=ap)
 
             return _scan(params, step, (ts_all, h_rounds, xb_all, yb_all,
                                         pw_all))
     elif data_mode == "device":
         def simulate(params, store, data_key, h_rounds, base_key, test_x,
-                     test_y, pw_all=None, fault_params=None):
+                     test_y, pw_all=None, fault_params=None, agg_params=None):
             ts_all = jnp.arange(cfg.rounds, dtype=jnp.int32)
             pw_all = _resolve_pw(h_rounds, pw_all)
             fp = _resolve_fp(fault_params)
+            ap = _resolve_ap(agg_params)
 
             sample = (sample_round_client_stream
                       if cfg.data_stream == "client" else sample_round)
@@ -526,7 +551,7 @@ def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
                 xb, yb = sample(store, data_key, t, cfg.local_iters,
                                 cfg.batch_size)
                 return round_step(carry, t, h_t, xb, yb, pw, base_key,
-                                  test_x, test_y, fp=fp)
+                                  test_x, test_y, fp=fp, ap=ap)
 
             return _scan(params, step, (ts_all, h_rounds, pw_all))
     else:
@@ -570,21 +595,28 @@ def build_chunk_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
             return None
         return cfg.faults.params() if fault_params is None else fault_params
 
+    def _ap(agg_params):
+        if cfg.aggregator is None:
+            return None
+        return cfg.aggregator.params() if agg_params is None else agg_params
+
     if data_mode == "prestack":
         def chunk(carry, ts, h, xb, yb, pw, base_key, test_x, test_y,
-                  fault_params=None):
+                  fault_params=None, agg_params=None):
             fp = _fp(fault_params)
+            ap = _ap(agg_params)
 
             def step(c, xs):
                 t, h_t, xbt, ybt, pwt = xs
                 return round_step(c, t, h_t, xbt, ybt, pwt, base_key,
-                                  test_x, test_y, fp=fp)
+                                  test_x, test_y, fp=fp, ap=ap)
 
             return jax.lax.scan(step, carry, (ts, h, xb, yb, pw))
     elif data_mode == "device":
         def chunk(carry, ts, h, pw, store, data_key, base_key, test_x,
-                  test_y, fault_params=None):
+                  test_y, fault_params=None, agg_params=None):
             fp = _fp(fault_params)
+            ap = _ap(agg_params)
             sample = (sample_round_client_stream
                       if cfg.data_stream == "client" else sample_round)
 
@@ -593,7 +625,7 @@ def build_chunk_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
                 xb, yb = sample(store, data_key, t, cfg.local_iters,
                                 cfg.batch_size)
                 return round_step(c, t, h_t, xb, yb, pwt, base_key,
-                                  test_x, test_y, fp=fp)
+                                  test_x, test_y, fp=fp, ap=ap)
 
             return jax.lax.scan(step, carry, (ts, h, pw))
     else:

@@ -32,13 +32,14 @@ from ..data.device import (StreamingSampler, data_stream_key,
 from ..data.pipeline import BatchIterator, client_batches
 from ..data.synthetic import Dataset
 from ..optim import Optimizer, sgd
-from .engine import (SimConfig, SimResult, empty_client_batches,
-                     make_local_train, resolve_data_path, round_decision,
-                     run_simulation_scan)
+from .engine import (SimConfig, SimResult, apply_round_decision,
+                     empty_client_batches, make_local_train,
+                     resolve_data_path, round_decision, run_simulation_scan)
 from .faults import (FaultConfig, GuardConfig, apply_faults, corrupt_deltas,
                      init_fault_state)
-from .state import (FLState, broadcast_to_participants, guarded_aggregate,
-                    init_fl_state, masked_aggregate, pseudo_gradients)
+from .state import (AggregatorConfig, FLState, broadcast_to_participants,
+                    guarded_aggregate, init_fl_state, masked_aggregate,
+                    pseudo_gradients, scheme_aggregate)
 
 __all__ = ["SimConfig", "SimResult", "run_simulation",
            "run_simulation_legacy", "make_round_fn"]
@@ -47,22 +48,27 @@ __all__ = ["SimConfig", "SimResult", "run_simulation",
 def make_round_fn(loss_fn: Callable, opt: Optimizer, local_iters: int,
                   num_clients: int, local_mode: str = "continuous",
                   faults: FaultConfig | None = None,
-                  guards: GuardConfig | None = None):
+                  guards: GuardConfig | None = None,
+                  aggregator: AggregatorConfig | None = None):
     """Build the jitted per-round transition over stacked client states.
 
     With faults/guards the transition takes the fault pipeline's extra
     operands — ``fl_round(state, mask, xb, yb, delivered, corrupt)`` — and
     applies the same corruption transform and defensive aggregation as the
     scan engine's round step (the legacy loop is the bit-parity witness for
-    the robustness layer too).
+    the robustness layer too).  With ``aggregator`` set the transition also
+    takes the round's nominal policy ``probs`` and applies the pluggable
+    scheme aggregation instead of the paper's 1/K averaging.
     """
     vtrain = make_local_train(loss_fn, opt)
     fparams = faults.params() if faults is not None else None
+    aparams = aggregator.params() if aggregator is not None else None
 
     @jax.jit
     def fl_round(state: FLState, mask: jax.Array, xb: jax.Array,
                  yb: jax.Array, delivered: jax.Array | None = None,
-                 corrupt: jax.Array | None = None) -> FLState:
+                 corrupt: jax.Array | None = None,
+                 probs: jax.Array | None = None) -> FLState:
         landed = mask if delivered is None else delivered
         client = vtrain(state.client_params, xb, yb)
         if local_mode == "participants":
@@ -77,7 +83,14 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, local_iters: int,
         deltas = pseudo_gradients(state)
         if faults is not None and corrupt is not None:
             deltas = corrupt_deltas(deltas, corrupt, fparams, faults)
-        if guards is not None and guards.active:
+        if aggregator is not None:
+            staleness = state.round - state.last_tx
+            p = (jnp.zeros((num_clients,), jnp.float32) if probs is None
+                 else probs)
+            new_global = scheme_aggregate(state.global_params, deltas,
+                                          landed, num_clients, staleness,
+                                          p, aparams, guards=guards)
+        elif guards is not None and guards.active:
             staleness = state.round - state.last_tx
             new_global = guarded_aggregate(state.global_params, deltas,
                                            landed, num_clients, staleness,
@@ -133,11 +146,19 @@ def run_simulation_legacy(init_params: Any,
     state = init_fl_state(init_params, K)
     round_fn = make_round_fn(loss_fn, opt, cfg.local_iters, K,
                              local_mode=cfg.local_mode, faults=cfg.faults,
-                             guards=cfg.guards)
+                             guards=cfg.guards, aggregator=cfg.aggregator)
     base_key = jax.random.PRNGKey(cfg.seed)
 
-    decide = jax.jit(lambda t, h_t, st: round_decision(
-        policy_fn, t, h_t, st, base_key, cfg, cell, K))
+    # split the policy eval from the decision so the nominal probs (pre
+    # aging-boost) are available to scheme aggregation — mask/forced/w/e
+    # stay bit-identical to round_decision (which composes the same pair)
+    def _decide(t, h_t, st):
+        probs, w = policy_fn(t, h_t, st)
+        mask, forced, w, e_round = apply_round_decision(
+            probs, w, t, h_t, st, base_key, cfg, cell, K)
+        return probs, mask, forced, w, e_round
+
+    decide = jax.jit(_decide)
 
     # fault pipeline: same salted fold_in streams as the scan engine, so the
     # two realize identical faults round for round
@@ -199,7 +220,8 @@ def run_simulation_legacy(init_params: Any,
             yb = jnp.stack(ys, axis=1)
 
         # --- policy + autonomous decisions + energy ledger (eq. 5) ---------
-        mask, forced, w, e_round = decide(jnp.int32(t), h_all[:, t], state)
+        probs, mask, forced, w, e_round = decide(jnp.int32(t), h_all[:, t],
+                                                 state)
         # --- fault pipeline (availability → crash → lossy uplink) ----------
         if cfg.faults is not None:
             out, fstate = fault_step(jnp.int32(t), mask, e_round, fstate)
@@ -214,7 +236,7 @@ def run_simulation_legacy(init_params: Any,
         parts[t] = np.asarray(mask)
 
         # --- one protocol round --------------------------------------------
-        state = round_fn(state, mask, xb, yb, delivered, corrupt)
+        state = round_fn(state, mask, xb, yb, delivered, corrupt, probs)
 
         if t % cfg.eval_every == 0 or t == cfg.rounds - 1:
             a, l = eval_fn(state.global_params)

@@ -61,7 +61,8 @@ from ..data.device import (DeviceDataStore, data_stream_key,
 from ..data.synthetic import Dataset
 from ..optim import Optimizer, sgd
 from .faults import apply_faults, corrupt_deltas, init_fault_state
-from .state import (FLState, guarded_subset_aggregate, subset_aggregate)
+from .state import (FLState, guarded_subset_aggregate,
+                    scheme_subset_aggregate, subset_aggregate)
 
 #: number of times the participant-shaped training program has been traced.
 #: Shapes depend only on (bucket, T, model), so a K-sweep sharing a bucket
@@ -115,6 +116,7 @@ class ParticipationTrace(NamedTuple):
     delivered: jax.Array    # [P] bool — upload survived the fault pipeline
     corrupt: jax.Array      # [P] bool — delivered but adversarially mangled
     stale: jax.Array        # [P] int32 staleness Δτ at transmission time
+    prob: jax.Array         # [P] f32 nominal policy prob (pre aging-boost)
     n_tx: jax.Array         # int32 realized transmitter count (overflow check)
 
 
@@ -124,26 +126,33 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
     ParticipationTrace[T])``.
 
     Pure ``[K]``-vector work per round; the policy must be ``state_free``
-    (all five paper schemes are) because phase A runs before any training.
-    Decision math is byte-for-byte the dense engine's
-    ``apply_round_decision`` on the identical ``fold_in(base_key, t)``
-    stream, so realized masks and the energy ledger match the dense scan
-    bit-wise.
+    (all five paper schemes are) or a *ledger* policy reading only the
+    ``(round, last_tx)`` staleness ledger that phase A already carries —
+    state_free policies hoist to one vmap over the horizon, ledger policies
+    run inside the scan step against the :class:`_DecisionView`.  Decision
+    math is byte-for-byte the dense engine's ``apply_round_decision`` on the
+    identical ``fold_in(base_key, t)`` stream, so realized masks and the
+    energy ledger match the dense scan bit-wise.
     """
     from .engine import apply_round_decision  # deferred: engine imports us
 
-    if not getattr(policy_fn, "state_free", False):
+    hoist = getattr(policy_fn, "state_free", False)
+    if not hoist and not getattr(policy_fn, "ledger", False):
         raise ValueError(
-            "sparse participation requires a state_free policy (it decides "
-            "the whole horizon before training); policies reading the "
-            "simulation state must use the dense engine")
+            "sparse participation requires a state_free or ledger policy "
+            "(phase A carries only the (round, last_tx) ledger); policies "
+            "reading trained parameters must use the dense engine")
     K = num_clients
     faults = cfg.faults
     fparams = faults.params() if faults is not None else None
 
     def program(h_rounds, base_key):
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
-        pw_all = jax.vmap(lambda t, h: policy_fn(t, h, None))(ts, h_rounds)
+        if hoist:
+            pw_all = jax.vmap(lambda t, h: policy_fn(t, h, None))(
+                ts, h_rounds)
+        else:  # ledger policy: dummy lanes, the policy runs in the step
+            pw_all = (jnp.zeros((cfg.rounds, 0)),) * 2
 
         def step(carry, xs):
             if faults is not None:
@@ -152,6 +161,8 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
                 last_tx, anchor_slot, energy = carry
             t, h_t, probs, w = xs
             view = _DecisionView(round=t, last_tx=last_tx)
+            if not hoist:
+                probs, w = policy_fn(t, h_t, view)
             mask, forced, w, e_round = apply_round_decision(
                 probs, w, t, h_t, view, base_key, cfg, cell, K)
             # fault pipeline on the same salted streams as the dense engine:
@@ -172,6 +183,7 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
             del_p = valid & (delivered[kc] > 0)
             cor_p = valid & corrupt[kc]
             stale_p = jnp.where(valid, t - last_tx[kc], 0)
+            prob_p = jnp.where(valid, probs.astype(jnp.float32)[kc], 0.0)
             # the server's ledgers advance on *delivered* uploads (the dense
             # engine broadcasts to the delivered set) — a lost upload leaves
             # last_tx/anchor untouched, so its staleness keeps growing
@@ -181,7 +193,8 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
                      if faults is not None
                      else (last_tx, anchor_slot, energy))
             return carry, ParticipationTrace(idx, valid, slot_p, e_p,
-                                             del_p, cor_p, stale_p, n_tx)
+                                             del_p, cor_p, stale_p, prob_p,
+                                             n_tx)
 
         carry0 = (jnp.zeros((K,), jnp.int32), jnp.zeros((K,), jnp.int32),
                   jnp.zeros((K,), jnp.float32))
@@ -211,7 +224,7 @@ def _train_cache_key(cfg, opt_token, loss_fn, acc_fn, params, sample_shape,
     return (bucket, cfg.rounds, cfg.local_iters, cfg.batch_size,
             cfg.eval_every, opt_token, id(loss_fn), id(acc_fn), treedef,
             shapes, tuple(sample_shape), tuple(test_shape),
-            repr(cfg.faults), repr(cfg.guards))
+            repr(cfg.faults), repr(cfg.guards), repr(cfg.aggregator))
 
 
 def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
@@ -231,6 +244,11 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
     the defensive :func:`~repro.fl.state.guarded_subset_aggregate` when
     ``cfg.guards`` is active.  Omitted (the faults-off call) they default to
     ``delivered = valid`` / no corruption — the pre-robustness program.
+
+    With ``cfg.aggregator`` set the update swaps to the pluggable scheme
+    aggregation (:func:`~repro.fl.state.scheme_subset_aggregate`); phase A's
+    nominal-prob lane rides in as ``probs_all`` and ``agg_params`` can be a
+    traced :class:`~repro.fl.state.AggParams` (vmapped scheme panels).
     """
     from .engine import make_local_train  # deferred: engine imports us
 
@@ -238,11 +256,12 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
     T = cfg.rounds
     faults = cfg.faults
     guards = cfg.guards
+    agg = cfg.aggregator
     fparams = faults.params() if faults is not None else None
 
     def program(params, xb_all, yb_all, valid_all, slot_all, num_clients,
                 test_x, test_y, delivered_all=None, corrupt_all=None,
-                stale_all=None):
+                stale_all=None, probs_all=None, agg_params=None):
         global TRAIN_TRACE_COUNT
         TRAIN_TRACE_COUNT += 1
         hist0 = jax.tree_util.tree_map(
@@ -254,6 +273,11 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
             corrupt_all = jnp.zeros(valid_all.shape, bool)
         if stale_all is None:
             stale_all = jnp.zeros(valid_all.shape, jnp.int32)
+        if probs_all is None:
+            probs_all = jnp.zeros(valid_all.shape, jnp.float32)
+        ap = None
+        if agg is not None:
+            ap = agg.params() if agg_params is None else agg_params
 
         def eval_now(p):
             return (jnp.asarray(acc_fn(p, test_x, test_y), jnp.float32),
@@ -264,7 +288,7 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
             return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
 
         def step(hist, xs):
-            t, xb, yb, valid, slot, deliv, corr, stale = xs
+            t, xb, yb, valid, slot, deliv, corr, stale, prob = xs
             g_t = jax.tree_util.tree_map(lambda h: h[t], hist)
             anchors = jax.tree_util.tree_map(lambda h: h[slot], hist)
             trained = vtrain(anchors, xb, yb)
@@ -272,7 +296,11 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
                                             anchors)
             if faults is not None:
                 deltas = corrupt_deltas(deltas, corr, fparams, faults)
-            if guards is not None and guards.active:
+            if agg is not None:
+                g_new = scheme_subset_aggregate(g_t, deltas, deliv,
+                                                num_clients, stale, prob,
+                                                ap, guards=guards)
+            elif guards is not None and guards.active:
                 g_new = guarded_subset_aggregate(g_t, deltas, deliv,
                                                  num_clients, stale, guards)
             else:
@@ -286,7 +314,7 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
         ts = jnp.arange(T, dtype=jnp.int32)
         hist, traces = jax.lax.scan(
             step, hist0, (ts, xb_all, yb_all, valid_all, slot_all,
-                          delivered_all, corrupt_all, stale_all))
+                          delivered_all, corrupt_all, stale_all, probs_all))
         g_final = jax.tree_util.tree_map(lambda h: h[T], hist)
         return g_final, traces
 
@@ -306,7 +334,12 @@ def _cached_train_program(key, builder: Callable) -> Callable:
 
 def _auto_bucket(policy_fn, h_rounds, cfg, num_clients: int) -> int:
     """Bucket from the expected transmitting mass: max over rounds of Σp,
-    with Poisson-tail headroom (see :func:`participant_bucket`)."""
+    with Poisson-tail headroom (see :func:`participant_bucket`).
+
+    Ledger policies are probed at zero staleness (``state=None``) — their
+    contract requires tolerating it; the Poisson-tail headroom absorbs the
+    resulting estimate noise, and the spill path stays exact regardless.
+    """
     ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
     probs = jax.jit(jax.vmap(lambda t, h: policy_fn(t, h, None)[0]))(
         ts, h_rounds)
@@ -405,7 +438,7 @@ def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
         g_final, (accs, losses, dids) = train(
             params, xb_all, yb_all, ptr.valid, ptr.anchor_slot,
             jnp.int32(K), test_x, test_y, ptr.delivered, ptr.corrupt,
-            ptr.stale)
+            ptr.stale, ptr.prob)
 
         # host-side densification of the participant trace (numpy, O(T·K))
         idx = np.asarray(ptr.part_idx)
@@ -451,17 +484,19 @@ def resolve_participation(cfg, policy_fn, data_path: str,
     """Resolve ``cfg.participation`` to ``"dense"`` or ``"sparse"``.
 
     ``"auto"`` picks sparse exactly when its preconditions hold — the
-    participants-only local mode, a state_free policy, the device data path,
+    participants-only local mode, a state_free or ledger policy (see
+    :func:`repro.core.selection.policy_ledger_ok`), the device data path,
     and the per-client minibatch stream; anything else keeps the dense scan.
     ``"sparse"`` raises on unmet preconditions instead of silently changing
     semantics.
     """
+    from ..core.selection import policy_ledger_ok
+
     mode = cfg.participation
     if mode not in ("dense", "sparse", "auto"):
         raise ValueError(f"unknown participation {mode!r} "
                          "(expected dense|sparse|auto)")
-    state_free = getattr(policy_fn, "state_free", False)
-    ok = (cfg.local_mode == "participants" and state_free
+    ok = (cfg.local_mode == "participants" and policy_ledger_ok(policy_fn)
           and data_path == "device" and cfg.data_stream == "client")
     if mode == "auto":
         return "sparse" if ok else "dense"

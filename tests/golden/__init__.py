@@ -1,0 +1,2 @@
+"""Golden-trace regression layer: pinned tiny-run trajectories per
+scheme × execution path (see harness.py and regenerate.py)."""

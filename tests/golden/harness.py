@@ -1,0 +1,171 @@
+"""Golden-trace harness: deterministic tiny runs per scheme × path.
+
+The scheme comparison is only trustworthy if its curves cannot drift
+silently between PRs, so this harness pins, for every scheme in the panel
+and every execution path (dense scan / legacy host loop / sparse
+two-phase):
+
+* the realized participation masks (hashed — threefry PRNG is exact and
+  platform-stable, so the hash must match bit-for-bit);
+* the loss/accuracy trajectory and the cumulative energy timeline
+  (compared with float tolerances — training math may reassociate across
+  BLAS builds, physics must not move).
+
+``engine_fingerprint()`` hashes the engine source files; ``traces.json``
+records the fingerprint it was generated against.  CI fails when the
+fingerprint is stale (engine changed, goldens not regenerated — run
+``python tests/golden/regenerate.py``) and when any trace drifts.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+GOLDEN_PATH = Path(__file__).resolve().parent / "traces.json"
+
+#: every source file whose behavior the goldens pin — editing any of these
+#: requires regenerating traces.json (the CI fingerprint check enforces it)
+ENGINE_SOURCES = [
+    "src/repro/fl/engine.py",
+    "src/repro/fl/state.py",
+    "src/repro/fl/sparse.py",
+    "src/repro/fl/simulator.py",
+    "src/repro/fl/faults.py",
+    "src/repro/fl/schemes.py",
+    "src/repro/core/selection.py",
+    "src/repro/core/channel.py",
+    "src/repro/data/device.py",
+]
+
+PATHS = ("dense", "legacy", "sparse")
+
+# trace-compare tolerances: masks/eval grid exact, training floats loose
+# enough for BLAS reassociation, tight enough to catch semantic drift
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def engine_fingerprint() -> str:
+    h = hashlib.sha256()
+    for rel in ENGINE_SOURCES:
+        h.update(rel.encode())
+        h.update((REPO / rel).read_bytes())
+    return h.hexdigest()
+
+
+def golden_world():
+    """Fixed tiny world: 5 clients, 8 rounds, 16-dim MNIST-like shards."""
+    import jax
+    from repro.core import CellConfig
+    from repro.core.channel import channel_gains, sample_positions
+    from repro.data import Dataset, make_mnist_like, shard_noniid
+    from repro.models.small import init_mlp
+
+    K, T, dim = 5, 8, 16
+    tr, te = make_mnist_like(jax.random.PRNGKey(0), n_train=600, n_test=200)
+    clients = shard_noniid(jax.random.PRNGKey(1), tr, K, d=2)
+    clients = [Dataset(c.x[:, :dim], c.y, c.num_classes) for c in clients]
+    te = Dataset(te.x[:, :dim], te.y, te.num_classes)
+    cell = CellConfig(num_clients=K)
+    pos = sample_positions(jax.random.PRNGKey(2), cell)
+    h = channel_gains(jax.random.PRNGKey(3), pos, T).T
+    params = init_mlp(jax.random.PRNGKey(4), dims=(dim, 8, 10))
+    return clients, te, cell, h, params, K, T
+
+
+def scheme_panel(K: int):
+    """The pinned panel: one lane per aggregator family, policies chosen so
+    sparse preconditions hold (state_free or ledger)."""
+    from repro.core.selection import (age_aware_policy, csma_policy,
+                                      random_policy)
+    from repro.fl import AggregatorConfig
+
+    return {
+        "paper": (random_policy(0.4, K), AggregatorConfig(kind="paper")),
+        "fedasync-hinge": (random_policy(0.4, K),
+                           AggregatorConfig(kind="fedasync",
+                                            staleness_fn="hinge")),
+        "fedasync-poly": (random_policy(0.4, K),
+                          AggregatorConfig(kind="fedasync",
+                                           staleness_fn="poly")),
+        "csmaafl": (csma_policy(2, K), AggregatorConfig(kind="csmaafl")),
+        "age-aware": (age_aware_policy(2, K),
+                      AggregatorConfig(kind="age")),
+    }
+
+
+def _cfg(T: int, aggregator):
+    from repro.fl import SimConfig
+
+    return SimConfig(rounds=T, local_iters=1, batch_size=4, eval_every=2,
+                     local_mode="participants", data_path="device",
+                     data_stream="client", aggregator=aggregator)
+
+
+def _trace(result) -> dict:
+    import numpy as np
+
+    mask = np.asarray(result.participation)
+    return {
+        "mask_sha256": hashlib.sha256(
+            mask.astype(np.uint8).tobytes()).hexdigest(),
+        "eval_rounds": np.asarray(result.eval_rounds).astype(int).tolist(),
+        "loss": [float(x) for x in np.asarray(result.test_loss)],
+        "acc": [float(x) for x in np.asarray(result.test_acc)],
+        "energy_timeline": [float(x) for x in
+                            np.asarray(result.energy_timeline)],
+    }
+
+
+def compute_traces() -> dict:
+    """Run every scheme on every path; return the golden document."""
+    from repro.fl import (make_sparse_runner, run_simulation,
+                          run_simulation_legacy)
+    from repro.models.small import mlp_accuracy, mlp_loss
+
+    clients, te, cell, h, params, K, T = golden_world()
+    traces = {}
+    for name, (policy, agg) in scheme_panel(K).items():
+        cfg = _cfg(T, agg)
+        traces[f"{name}/dense"] = _trace(run_simulation(
+            params, mlp_loss, mlp_accuracy, clients, te, policy, h, cell,
+            cfg))
+        traces[f"{name}/legacy"] = _trace(run_simulation_legacy(
+            params, mlp_loss, mlp_accuracy, clients, te, policy, h, cell,
+            cfg))
+        traces[f"{name}/sparse"] = _trace(make_sparse_runner(
+            mlp_loss, mlp_accuracy, clients, te, policy, cell, cfg)(
+                params, h))
+    return {"fingerprint": engine_fingerprint(), "traces": traces}
+
+
+def load_goldens() -> dict:
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def compare_traces(current: dict, golden: dict) -> list[str]:
+    """Return a list of human-readable drift descriptions (empty = clean)."""
+    import numpy as np
+
+    problems = []
+    cur_t, gold_t = current["traces"], golden["traces"]
+    for key in sorted(set(cur_t) | set(gold_t)):
+        if key not in cur_t:
+            problems.append(f"{key}: missing from current run")
+            continue
+        if key not in gold_t:
+            problems.append(f"{key}: not in goldens (regenerate)")
+            continue
+        c, g = cur_t[key], gold_t[key]
+        if c["mask_sha256"] != g["mask_sha256"]:
+            problems.append(f"{key}: participation mask hash drifted")
+        if c["eval_rounds"] != g["eval_rounds"]:
+            problems.append(f"{key}: eval grid drifted")
+        for field in ("loss", "acc", "energy_timeline"):
+            if not np.allclose(c[field], g[field], rtol=RTOL, atol=ATOL):
+                delta = float(np.max(np.abs(
+                    np.asarray(c[field]) - np.asarray(g[field]))))
+                problems.append(f"{key}: {field} drifted (max |Δ|={delta:g})")
+    return problems

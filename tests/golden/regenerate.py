@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Regenerate (or verify) the golden scheme traces.
+
+Usage (from the repo root, with src/ on PYTHONPATH):
+
+    python tests/golden/regenerate.py                    # rewrite traces.json
+    python tests/golden/regenerate.py --check            # recompute + compare
+    python tests/golden/regenerate.py --check-fingerprint  # sources vs goldens
+
+``--check-fingerprint`` is the cheap CI gate: it fails (exit 1) when any
+engine source file changed since the goldens were generated — no JAX run
+involved.  ``--check`` recomputes every scheme × path trace and fails on
+drift; regenerate and commit traces.json when the change is intentional.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+sys.path.insert(0, str(Path(__file__).resolve().parents[2] / "src"))
+
+from golden import harness  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="recompute traces and fail on drift")
+    ap.add_argument("--check-fingerprint", action="store_true",
+                    help="fail if engine sources changed since generation")
+    args = ap.parse_args(argv)
+
+    if args.check_fingerprint:
+        golden = harness.load_goldens()
+        current = harness.engine_fingerprint()
+        if golden["fingerprint"] != current:
+            print("STALE: engine sources changed since goldens were "
+                  "generated.\n  golden  "
+                  f"{golden['fingerprint']}\n  current {current}\n"
+                  "Run `python tests/golden/regenerate.py` (and review the "
+                  "--check diff) to refresh.")
+            return 1
+        print(f"fingerprint fresh: {current}")
+        return 0
+
+    doc = harness.compute_traces()
+    if args.check:
+        golden = harness.load_goldens()
+        problems = harness.compare_traces(doc, golden)
+        if golden["fingerprint"] != doc["fingerprint"]:
+            problems.append("engine fingerprint stale (sources changed)")
+        if problems:
+            print("GOLDEN DRIFT:")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        print(f"{len(doc['traces'])} traces match the goldens.")
+        return 0
+
+    with open(harness.GOLDEN_PATH, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(doc['traces'])} traces -> {harness.GOLDEN_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,58 @@
+"""Golden-trace regression: every scheme × path trajectory is pinned.
+
+A failure here means a code change moved a scheme curve.  If intentional,
+regenerate with `python tests/golden/regenerate.py` and commit the new
+traces.json alongside the change; if not, you just caught a regression
+the parity tests can't see (they compare paths to each other, not to
+history)."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from golden import harness  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def current():
+    return harness.compute_traces()
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if not harness.GOLDEN_PATH.exists():
+        pytest.skip("goldens not generated yet "
+                    "(run python tests/golden/regenerate.py)")
+    return harness.load_goldens()
+
+
+def test_fingerprint_fresh(golden):
+    assert golden["fingerprint"] == harness.engine_fingerprint(), (
+        "engine sources changed since the goldens were generated — run "
+        "`python tests/golden/regenerate.py` and review the diff")
+
+
+def test_every_scheme_and_path_pinned(golden):
+    K = 5
+    want = {f"{name}/{path}" for name in harness.scheme_panel(K)
+            for path in harness.PATHS}
+    assert set(golden["traces"]) == want
+
+
+def test_no_trace_drift(current, golden):
+    problems = harness.compare_traces(current, golden)
+    assert not problems, "\n".join(problems)
+
+
+def test_masks_identical_across_paths(current):
+    # the fold_in PRNG contract, pinned through the goldens: all three
+    # paths realize the identical participation masks
+    traces = current["traces"]
+    names = {k.split("/")[0] for k in traces}
+    for name in names:
+        hashes = {traces[f"{name}/{p}"]["mask_sha256"]
+                  for p in harness.PATHS}
+        assert len(hashes) == 1, f"{name}: paths realized different masks"

@@ -1,0 +1,262 @@
+"""Three-way sparse↔dense↔legacy parity for every pluggable aggregator,
+plus the scheme-matrix fan-out: dense and sparse matrices agree lane for
+lane, each path compiles once, and `aggregator=None` stays byte-identical
+to the pre-scheme engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CellConfig
+from repro.core.channel import channel_gains, sample_positions
+from repro.core.selection import (age_aware_policy, csma_policy,
+                                  random_policy)
+from repro.data import Dataset, make_mnist_like, shard_noniid
+from repro.data.device import from_client_datasets
+from repro.fl import (AggregatorConfig, SimConfig, make_sparse_runner,
+                      run_simulation, run_simulation_legacy)
+from repro.fl import sparse as sparse_mod
+from repro.fl.schemes import (SchemeSpec, default_scheme_panel,
+                              run_scheme_matrix, stack_stores)
+from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
+
+K, T, DIM = 5, 8, 32
+
+AGGREGATORS = [
+    AggregatorConfig(kind="paper"),
+    AggregatorConfig(kind="fedasync", staleness_fn="constant"),
+    AggregatorConfig(kind="fedasync", staleness_fn="hinge"),
+    AggregatorConfig(kind="fedasync", staleness_fn="poly"),
+    AggregatorConfig(kind="csmaafl"),
+    AggregatorConfig(kind="age"),
+]
+
+
+def _agg_id(agg):
+    return f"{agg.kind}-{agg.staleness_fn}"
+
+
+def tiny_world(K=K, rounds=T, dim=DIM, d=2):
+    tr, te = make_mnist_like(jax.random.PRNGKey(0), n_train=800, n_test=200)
+    clients = shard_noniid(jax.random.PRNGKey(1), tr, K, d=d)
+    clients = [Dataset(c.x[:, :dim], c.y, c.num_classes) for c in clients]
+    te = Dataset(te.x[:, :dim], te.y, te.num_classes)
+    cell = CellConfig(num_clients=K)
+    pos = sample_positions(jax.random.PRNGKey(2), cell)
+    h = channel_gains(jax.random.PRNGKey(3), pos, rounds).T
+    params = init_mlp(jax.random.PRNGKey(4), dims=(dim, 16, 10))
+    return clients, te, cell, h, params
+
+
+def sparse_cfg(**kw):
+    base = dict(rounds=T, local_iters=2, batch_size=4, eval_every=2,
+                local_mode="participants", data_path="device",
+                data_stream="client")
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def three_way(cfg, policy):
+    clients, te, cell, h, params = tiny_world()
+    scan = run_simulation(params, mlp_loss, mlp_accuracy, clients, te,
+                          policy, h, cell, cfg)
+    legacy = run_simulation_legacy(params, mlp_loss, mlp_accuracy, clients,
+                                   te, policy, h, cell, cfg)
+    sp = make_sparse_runner(mlp_loss, mlp_accuracy, clients, te, policy,
+                           cell, cfg)(params, h)
+    return scan, legacy, sp
+
+
+def assert_three_way(scan, legacy, sp):
+    # identical fold_in streams ⇒ identical realized masks on all paths
+    np.testing.assert_array_equal(scan.participation, legacy.participation)
+    np.testing.assert_array_equal(scan.participation, sp.participation)
+    np.testing.assert_array_equal(scan.eval_rounds, legacy.eval_rounds)
+    np.testing.assert_array_equal(scan.eval_rounds, sp.eval_rounds)
+    for other in (legacy, sp):
+        np.testing.assert_allclose(scan.energy_per_client,
+                                   other.energy_per_client, rtol=1e-6)
+        np.testing.assert_allclose(scan.energy_timeline,
+                                   other.energy_timeline, rtol=1e-5)
+        np.testing.assert_allclose(scan.test_acc, other.test_acc, atol=1e-5)
+        np.testing.assert_allclose(scan.test_loss, other.test_loss,
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("agg", AGGREGATORS, ids=_agg_id)
+def test_aggregator_three_way_parity(agg):
+    scan, legacy, sp = three_way(sparse_cfg(aggregator=agg),
+                                 csma_policy(3, K))
+    assert_three_way(scan, legacy, sp)
+
+
+@pytest.mark.parametrize("agg", [AGGREGATORS[0], AGGREGATORS[3],
+                                 AGGREGATORS[5]], ids=_agg_id)
+def test_ledger_policy_three_way_parity(agg):
+    # age-aware scheduling reads only (round, last_tx): phase A carries it
+    scan, legacy, sp = three_way(sparse_cfg(aggregator=agg),
+                                 age_aware_policy(2, K))
+    assert_three_way(scan, legacy, sp)
+
+
+def test_aggregator_none_is_bitwise_legacy_program():
+    # the None default must keep the exact pre-scheme program: the paper
+    # kind through the weighted path is numerically equal but need not be
+    # bit-identical (different float reduction order), so None is the
+    # bit-parity anchor
+    cfg_none = sparse_cfg(aggregator=None)
+    clients, te, cell, h, params = tiny_world()
+    a = run_simulation(params, mlp_loss, mlp_accuracy, clients, te,
+                       csma_policy(3, K), h, cell, cfg_none)
+    b = run_simulation_legacy(params, mlp_loss, mlp_accuracy, clients, te,
+                              csma_policy(3, K), h, cell, cfg_none)
+    np.testing.assert_array_equal(a.participation, b.participation)
+    np.testing.assert_array_equal(np.asarray(a.test_loss),
+                                  np.asarray(b.test_loss))
+
+
+def test_paper_kind_matches_plain_average():
+    # kind="paper" realizes the same m/K weights as masked_aggregate
+    cfg_plain = sparse_cfg(aggregator=None)
+    cfg_paper = sparse_cfg(aggregator=AggregatorConfig(kind="paper"))
+    clients, te, cell, h, params = tiny_world()
+    plain = run_simulation(params, mlp_loss, mlp_accuracy, clients, te,
+                           csma_policy(3, K), h, cell, cfg_plain)
+    paper = run_simulation(params, mlp_loss, mlp_accuracy, clients, te,
+                           csma_policy(3, K), h, cell, cfg_paper)
+    np.testing.assert_array_equal(plain.participation, paper.participation)
+    np.testing.assert_allclose(plain.test_loss, paper.test_loss, atol=1e-5)
+    np.testing.assert_allclose(plain.energy_per_client,
+                               paper.energy_per_client, rtol=1e-6)
+
+
+def test_guards_compose_with_scheme_aggregation():
+    from repro.fl import GuardConfig
+    agg = AggregatorConfig(kind="fedasync", staleness_fn="poly")
+    guards = GuardConfig(clip_norm=0.05)
+    scan, legacy, sp = three_way(sparse_cfg(aggregator=agg, guards=guards),
+                                 csma_policy(3, K))
+    assert_three_way(scan, legacy, sp)
+
+
+def test_schemes_differ():
+    # the panel is a real comparison: different aggregators produce
+    # different trajectories on the same channel/PRNG realization
+    cfg = sparse_cfg
+    clients, te, cell, h, params = tiny_world()
+    pol = csma_policy(3, K)
+    losses = {}
+    for agg in (AggregatorConfig(kind="fedasync", staleness_fn="poly"),
+                AggregatorConfig(kind="csmaafl"),
+                AggregatorConfig(kind="age")):
+        r = run_simulation(params, mlp_loss, mlp_accuracy, clients, te, pol,
+                           h, cell, cfg(aggregator=agg))
+        losses[agg.kind] = np.asarray(r.test_loss)
+    assert not np.allclose(losses["fedasync"], losses["csmaafl"])
+    assert not np.allclose(losses["fedasync"], losses["age"])
+
+
+# ---------------------------------------------------------------------------
+# scheme matrix fan-out
+# ---------------------------------------------------------------------------
+
+
+def _matrix_world(S=2, V=2):
+    _, te, cell, _, params = tiny_world()
+    tr, _ = make_mnist_like(jax.random.PRNGKey(0), n_train=800, n_test=200)
+    severities, stores = [], []
+    for d in (2, 4)[:V]:
+        cs = shard_noniid(jax.random.PRNGKey(1), tr, K, d=d)
+        cs = [Dataset(c.x[:, :DIM], c.y, c.num_classes) for c in cs]
+        severities.append(cs)
+        stores.append(from_client_datasets(cs, pad_to=256))
+    pos = sample_positions(jax.random.PRNGKey(2), cell)
+    h_stack = jnp.stack([channel_gains(jax.random.PRNGKey(30 + s), pos, T).T
+                         for s in range(S)])
+    return severities, stores, te, cell, h_stack, params
+
+
+def _panel():
+    return [
+        SchemeSpec("paper", random_policy(0.4, K),
+                   AggregatorConfig(kind="paper")),
+        SchemeSpec("fedasync", random_policy(0.4, K),
+                   AggregatorConfig(kind="fedasync", staleness_fn="poly")),
+        SchemeSpec("csmaafl", csma_policy(3, K),
+                   AggregatorConfig(kind="csmaafl")),
+        SchemeSpec("age-aware", age_aware_policy(2, K),
+                   AggregatorConfig(kind="age")),
+    ]
+
+
+def test_scheme_matrix_dense_sparse_agree():
+    _, stores, te, cell, h_stack, params = _matrix_world()
+    cfg = sparse_cfg()
+    seeds = [0, 1]
+    dense = run_scheme_matrix(params, mlp_loss, mlp_accuracy, stores, te,
+                              _panel(), h_stack, cell, cfg, seeds,
+                              participation="dense")
+    sparse = run_scheme_matrix(params, mlp_loss, mlp_accuracy, stores, te,
+                               _panel(), h_stack, cell, cfg, seeds,
+                               participation="sparse")
+    assert dense.acc.shape == (2, 4, 2, dense.eval_rounds.size)
+    np.testing.assert_array_equal(dense.participation, sparse.participation)
+    np.testing.assert_allclose(dense.energy, sparse.energy, rtol=1e-6)
+    np.testing.assert_allclose(dense.loss, sparse.loss, atol=1e-5)
+    np.testing.assert_allclose(dense.energy_timeline,
+                               sparse.energy_timeline, rtol=1e-5)
+
+
+def test_scheme_matrix_lanes_match_single_runs():
+    # lane (v, l, s) of the matrix == a single dense run with that scheme,
+    # that severity, that seed — the one-hot blend is exact
+    severities, stores, te, cell, h_stack, params = _matrix_world()
+    cfg = sparse_cfg()
+    panel = _panel()
+    mat = run_scheme_matrix(params, mlp_loss, mlp_accuracy, stores, te,
+                            panel, h_stack, cell, cfg, seeds=[0, 1],
+                            participation="dense")
+    from repro.fl.engine import make_runner
+    import dataclasses
+    for (v, l, s) in [(0, 0, 0), (1, 2, 1), (0, 3, 1)]:
+        cfg_l = dataclasses.replace(cfg, aggregator=panel[l].aggregator)
+        runner = make_runner(mlp_loss, mlp_accuracy, severities[v], te,
+                             panel[l].policy, cell, cfg_l)
+        single = runner(params, h_stack[s], seed=s)
+        np.testing.assert_array_equal(mat.participation[v, l, s],
+                                      single.participation)
+        np.testing.assert_allclose(mat.loss[v, l, s], single.test_loss,
+                                   atol=1e-5)
+        np.testing.assert_allclose(mat.energy[v, l, s],
+                                   single.energy_per_client, rtol=1e-6)
+
+
+def test_scheme_matrix_sparse_single_train_trace():
+    # the sparse matrix is one vmapped device program: the bucket-shaped
+    # training program traces exactly once for the whole fan-out
+    _, stores, te, cell, h_stack, params = _matrix_world()
+    cfg = sparse_cfg()
+    before = sparse_mod.TRAIN_TRACE_COUNT
+    run_scheme_matrix(params, mlp_loss, mlp_accuracy, stores, te, _panel(),
+                      h_stack, cell, cfg, seeds=[0, 1],
+                      participation="sparse")
+    assert sparse_mod.TRAIN_TRACE_COUNT == before + 1
+
+
+def test_default_scheme_panel_shape():
+    from repro.core import ProblemSpec
+    spec = ProblemSpec(cell=CellConfig(num_clients=K), rho=0.05,
+                       num_rounds=T)
+    panel = default_scheme_panel(spec, K, rhos=(0.5, 2.0))
+    names = [s.name for s in panel]
+    assert len(panel) >= 5 and len(set(names)) == len(names)
+    kinds = {s.aggregator.kind for s in panel}
+    assert {"paper", "fedasync", "csmaafl", "age"} <= kinds
+
+
+def test_stack_stores_rejects_mismatched_shapes():
+    clients, *_ = tiny_world()
+    a = from_client_datasets(clients, pad_to=256)
+    b = from_client_datasets(clients, pad_to=512)
+    with pytest.raises(ValueError, match="pad_to"):
+        stack_stores([a, b])

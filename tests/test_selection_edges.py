@@ -1,0 +1,114 @@
+"""Boundary coverage for the participation-sizing helpers:
+`average_participants` (expected transmitting mass) and
+`participant_bucket` (static padded bucket sizing) at the edges the
+sweeps never hit — zero expected mass, cap == floor, and K=1 worlds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.selection import (average_participants, csma_policy,
+                                  greedy_policy, participant_bucket,
+                                  participants_from_mask, random_policy)
+
+
+# ---------------------------------------------------------------------------
+# participant_bucket
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_expected_zero():
+    # zero expected mass still yields a usable bucket: the mean clamps to 1,
+    # headroom applies, and the floor/cap clamp wins
+    b = participant_bucket(0.0, cap=1024)
+    assert b >= 8 and (b & (b - 1)) == 0  # power of two, ≥ floor
+
+
+def test_bucket_expected_zero_small_cap():
+    # cap below the floor: the cap must win (a bucket can never exceed K)
+    assert participant_bucket(0.0, cap=4) == 4
+    assert participant_bucket(0.0, cap=1) == 1
+
+
+def test_bucket_cap_equals_floor():
+    assert participant_bucket(100.0, cap=8, floor=8) == 8
+    assert participant_bucket(0.0, cap=8, floor=8) == 8
+
+
+def test_bucket_k1():
+    assert participant_bucket(1.0, cap=1) == 1
+    assert participant_bucket(0.0, cap=1, floor=8) == 1
+
+
+def test_bucket_monotone_in_expected():
+    caps = [participant_bucket(e, cap=1 << 20) for e in
+            [0.0, 1.0, 4.0, 16.0, 64.0, 256.0, 1024.0]]
+    assert all(b <= a for b, a in zip(caps, caps[1:]))
+    # headroom: bucket always covers the expected mass itself
+    for e in [1.0, 10.0, 100.0, 5000.0]:
+        assert participant_bucket(e, cap=1 << 20) >= e
+
+
+def test_bucket_never_exceeds_cap():
+    for e in [0.0, 3.0, 1e6]:
+        for cap in [1, 2, 7, 64]:
+            assert participant_bucket(e, cap=cap) <= cap
+
+
+# ---------------------------------------------------------------------------
+# average_participants
+# ---------------------------------------------------------------------------
+
+
+def _h(K, T, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).gamma(2.0, 0.5, size=(K, T)),
+        jnp.float32)
+
+
+def test_average_participants_zero_probability():
+    K, T = 6, 5
+    avg = average_participants(random_policy(0.0, K), _h(K, T))
+    assert avg == 0.0
+
+
+def test_average_participants_constant_policy_exact():
+    K, T = 6, 5
+    # Bernoulli(p̄) every round: expected mass is exactly p̄·K
+    avg = average_participants(random_policy(0.3, K), _h(K, T))
+    np.testing.assert_allclose(avg, 0.3 * K, rtol=1e-6)
+
+
+def test_average_participants_topk_exact():
+    K, T = 8, 6
+    avg = average_participants(greedy_policy(3, K), _h(K, T))
+    np.testing.assert_allclose(avg, 3.0, rtol=1e-6)
+
+
+def test_average_participants_k1():
+    # single-client world: every policy's expected mass is its probability
+    T = 4
+    avg = average_participants(random_policy(0.7, 1), _h(1, T, seed=2))
+    np.testing.assert_allclose(avg, 0.7, rtol=1e-6)
+    avg = average_participants(greedy_policy(1, 1), _h(1, T, seed=2))
+    np.testing.assert_allclose(avg, 1.0, rtol=1e-6)
+    avg = average_participants(csma_policy(1, 1), _h(1, T, seed=2))
+    assert 0.0 <= avg <= 1.0 + 1e-6
+
+
+def test_average_participants_bucket_roundtrip_k1():
+    # the sizing pipeline end-to-end at K=1: mass → bucket → compaction
+    K = 1
+    avg = average_participants(random_policy(1.0, K), _h(K, 3, seed=1))
+    bucket = participant_bucket(avg, cap=K)
+    assert bucket == 1
+    idx, valid, n_tx = participants_from_mask(jnp.ones((K,)), bucket)
+    assert int(n_tx) == 1 and bool(valid[0]) and int(idx[0]) == 0
+
+
+def test_participants_from_mask_empty_round():
+    # expected=0 realized: an all-zero mask compacts to an all-padding row
+    idx, valid, n_tx = participants_from_mask(jnp.zeros((5,)), 4)
+    assert int(n_tx) == 0
+    assert not np.asarray(valid).any()
+    assert (np.asarray(idx) == 5).all()  # padded with K
