@@ -41,6 +41,8 @@ from repro.data.device import estimate_store_bytes
 from repro.fl import SimConfig, make_runner, stack_round_batches
 from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
 
+from .common import write_bench
+
 
 def build_world(K, T, n_train, seed=0):
     tr, te = make_mnist_like(jax.random.PRNGKey(seed), n_train=n_train,
@@ -145,9 +147,7 @@ def bench(quick: bool):
 
 
 def _write(payload, out_path):
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-    print(f"wrote {out_path}")
+    write_bench(out_path, payload)
 
 
 def main_quick():

@@ -45,6 +45,8 @@ from repro.fl import (SimConfig, make_runner, run_scenario_matrix,
                       run_seed_matrix, run_simulation_legacy)
 from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
 
+from .common import write_bench
+
 
 def build(K, T, n_train, seed=0):
     tr, te = make_mnist_like(jax.random.PRNGKey(seed), n_train=n_train,
@@ -256,8 +258,7 @@ def main_quick():
     payload = {"quick": True,
                "wallclock": bench_wallclock(True),
                "scenario_matrix": bench_matrix(True)}
-    with open("BENCH_engine.json", "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+    write_bench("BENCH_engine.json", payload)
     return payload
 
 
@@ -273,9 +274,7 @@ def main():
         "wallclock": bench_wallclock(args.quick),
         "scenario_matrix": bench_matrix(args.quick),
     }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-    print(f"wrote {args.out}")
+    write_bench(args.out, payload)
 
 
 if __name__ == "__main__":

@@ -37,6 +37,8 @@ from repro.fl import (FaultConfig, GuardConfig, SimConfig, make_runner,
                       run_fault_matrix)
 from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
 
+from .common import write_bench
+
 DIM = 64
 
 FAULTS = FaultConfig(p_fail=0.1, p_recover=0.5, diurnal_amp=0.5,
@@ -150,9 +152,7 @@ def bench(quick: bool) -> dict:
 
 
 def _write(payload, out_path):
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-    print(f"wrote {out_path}")
+    write_bench(out_path, payload)
 
 
 def main_quick():

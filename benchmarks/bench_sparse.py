@@ -44,6 +44,8 @@ from repro.fl import sparse as sparse_mod
 from repro.fl.sparse import make_sparse_runner
 from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
 
+from .common import write_bench
+
 DIM, N_PER, CLASSES = 8, 4, 10
 
 
@@ -166,9 +168,7 @@ def bench(quick: bool) -> dict:
 
 
 def _write(payload, out_path):
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-    print(f"wrote {out_path}")
+    write_bench(out_path, payload)
 
 
 def main_quick():

@@ -22,9 +22,12 @@ from repro.core.selection import (AgeBasedScheme, GreedyScheme, ProposedOnline,
 from repro.data import make_mnist_like, shard_noniid
 from repro.fl import SimConfig, run_simulation
 from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
+from repro.obs.telemetry import env_fingerprint
 
 FULL = os.environ.get("REPRO_FULL", "0") == "1"
 ART = os.environ.get("REPRO_ART", "artifacts/bench")
+
+BENCH_SCHEMA = "repro-bench/v1"
 
 
 @dataclasses.dataclass
@@ -80,10 +83,29 @@ def schemes_matched(world: World, spec: ProblemSpec):
             AgeBasedScheme(k=k, num_clients=K)], avg
 
 
+def stamp(payload: dict) -> dict:
+    """Attach the shared bench schema + environment fingerprint.  Every
+    BENCH_*.json and figure artifact carries the same envelope so
+    ``repro.obs.report --diff`` can compare any two of them."""
+    out = dict(payload)
+    out.setdefault("schema", BENCH_SCHEMA)
+    out.setdefault("fingerprint", env_fingerprint())
+    out.setdefault("written_unix", time.time())
+    return out
+
+
+def write_bench(path: str, payload: dict):
+    """Write a stamped benchmark ledger to ``path`` (the BENCH_*.json
+    files at the repo root that CI diffs for regressions)."""
+    with open(path, "w") as f:
+        json.dump(stamp(payload), f, indent=1, default=float)
+    print(f"[bench] wrote {path}")
+
+
 def save_artifact(name: str, payload: dict):
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, name + ".json"), "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+        json.dump(stamp(payload), f, indent=1, default=float)
 
 
 def row(name: str, us_per_call: float, derived: str):

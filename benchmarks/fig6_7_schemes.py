@@ -30,7 +30,7 @@ from repro.data.device import from_client_datasets
 from repro.fl import AggregatorConfig, SimConfig
 from repro.fl.schemes import SchemeSpec, run_scheme_matrix
 
-from .common import FULL, row, save_artifact
+from .common import FULL, row, save_artifact, write_bench
 
 SEVERITIES = (2, 5)            # non-IID shards per client (lower = harsher)
 
@@ -148,8 +148,7 @@ def main(argv=None) -> dict:
                                             iters, paths, params,
                                             test_ds_dim=dim)
     save_artifact(args.out, out)
-    with open(f"{args.out}.json", "w") as f:     # root copy for CI upload
-        json.dump(out, f, indent=1, default=float)
+    write_bench(f"{args.out}.json", out)         # root copy for CI upload
     return out
 
 

@@ -27,6 +27,11 @@ from repro.fl.distributed import param_count                 # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW,               # noqa: E402
                                PEAK_FLOPS_BF16)
 
+try:                                                         # noqa: E402
+    from .common import write_bench
+except ImportError:                                          # plain-script run
+    from common import write_bench
+
 ART = os.environ.get("REPRO_DRYRUN_ART", "artifacts/dryrun")
 
 
@@ -129,8 +134,7 @@ def main() -> list[dict]:
                   f"collective={r['t_collective_s']:.3e}s;"
                   f"dominant={r['dominant']};useful={r['useful_ratio']:.2f}")
     os.makedirs("artifacts", exist_ok=True)
-    with open("artifacts/roofline.json", "w") as f:
-        json.dump(rows, f, indent=1)
+    write_bench("artifacts/roofline.json", {"rows": rows})
 
     # markdown table for EXPERIMENTS.md
     lines = ["| arch | shape | mode | compute s | memory s | collective s |"

@@ -43,6 +43,9 @@ from ..data.device import (StreamingSampler, choose_data_path,
                            sample_round, sample_round_client_stream)
 from ..data.pipeline import BatchIterator, client_batches
 from ..data.synthetic import Dataset
+from ..obs.taps import (MetricsSpec, init_metrics, metrics_active,
+                        metrics_round_update)
+from ..obs.telemetry import emit_run_manifest, get_telemetry
 from ..optim import Optimizer, sgd
 from .faults import (FaultConfig, FaultState, GuardConfig, apply_faults,
                      corrupt_deltas, init_fault_state)
@@ -116,6 +119,12 @@ class SimConfig:
     # bucket toward the dense width and reruns (warn once), "error" keeps
     # the legacy hard RuntimeError.
     overflow: str = "spill"
+    # in-scan metrics taps (docs/observability.md): None (default) adds
+    # nothing to any carry or program — the bit-parity guarantee; a
+    # MetricsSpec threads fixed-shape accumulators (participation counts,
+    # staleness histogram, energy by cause, guard events, weight stats)
+    # through the scan carry and returns them on SimResult.metrics.
+    metrics: MetricsSpec | None = None
 
 
 class SimResult(NamedTuple):
@@ -131,6 +140,9 @@ class SimResult(NamedTuple):
     # availability/crash/uplink-loss, and which deliveries were corrupted.
     delivered: np.ndarray | None = None   # [rounds, K]
     corrupted: np.ndarray | None = None   # [rounds, K]
+    # in-scan metrics accumulators (None unless cfg.metrics enables taps);
+    # a repro.obs.taps.MetricsState of numpy arrays — feed metrics_summary.
+    metrics: Any = None
 
 
 class RoundTrace(NamedTuple):
@@ -336,9 +348,13 @@ def init_carry(params: Any, num_clients: int, cfg: SimConfig):
     programs are untouched."""
     state0 = init_fl_state(params, num_clients)
     energy0 = jnp.zeros((num_clients,), jnp.float32)
+    carry = (state0, energy0)
     if cfg.faults is not None:
-        return (state0, energy0, init_fault_state(num_clients))
-    return (state0, energy0)
+        carry = carry + (init_fault_state(num_clients),)
+    ms = init_metrics(cfg.metrics, num_clients, cfg.guards)
+    if ms is not None:       # metrics taps ride last in the carry
+        carry = carry + (ms,)
+    return carry
 
 
 def _make_round_step(vtrain: Callable, loss_fn: Callable, acc_fn: Callable,
@@ -352,20 +368,25 @@ def _make_round_step(vtrain: Callable, loss_fn: Callable, acc_fn: Callable,
     faults = cfg.faults
     guards = cfg.guards
     agg = cfg.aggregator
+    tapped = metrics_active(cfg.metrics, guards)
     if cfg.eval_mode not in ("inscan", "replay"):
         raise ValueError(f"unknown eval_mode {cfg.eval_mode!r} "
                          "(expected inscan|replay)")
 
     def round_step(carry, t, h_t, xb, yb, pw, base_key, test_x, test_y,
                    fp=None, ap=None):
+        state, energy = carry[0], carry[1]
         if faults is not None:
-            state, energy, fstate = carry
-        else:
-            state, energy = carry
+            fstate = carry[2]
+        if tapped:
+            mstate = carry[-1]
         # --- Steps 2-4: policy, Bernoulli draws, Δ_k, energy (eq. 5) -------
         probs, w = pw if hoist else policy_fn(t, h_t, state)
         mask, forced, w, e_round = apply_round_decision(
             probs, w, t, h_t, state, base_key, cfg, cell, K)
+        # decision energy before the fault pipeline — the taps' retry-
+        # overhead lane is Σ relu(paid − decided)
+        e_base = e_round
         # --- fault pipeline: availability → crash → lossy uplink -----------
         # (salted fold_in streams — the decision draw above is untouched)
         if faults is not None:
@@ -413,6 +434,14 @@ def _make_round_step(vtrain: Callable, loss_fn: Callable, acc_fn: Callable,
         else:
             new_global = masked_aggregate(state.global_params, deltas,
                                           delivered, K)
+        if tapped:
+            ap_eff = ((agg.params() if ap is None else ap)
+                      if agg is not None else None)
+            mstate = metrics_round_update(
+                mstate, cfg.metrics, mask=mask, forced=forced, e_base=e_base,
+                e_round=e_round, staleness=state.round - state.last_tx,
+                delivered=delivered, deltas=deltas, probs=probs,
+                num_clients=K, guards=guards, agg_params=ap_eff)
         state = broadcast_to_participants(state, new_global, delivered)
 
         # --- strided eval (stays on device; read back once at the end).
@@ -436,8 +465,11 @@ def _make_round_step(vtrain: Callable, loss_fn: Callable, acc_fn: Callable,
                                      t == cfg.rounds - 1)
             acc, loss = jax.lax.cond(do_eval, eval_now, skip_eval,
                                      state.global_params)
-        carry = ((state, energy, fstate) if faults is not None
-                 else (state, energy))
+        carry = (state, energy)
+        if faults is not None:
+            carry = carry + (fstate,)
+        if tapped:
+            carry = carry + (mstate,)
         return carry, RoundTrace(mask, e_round, acc, loss, do_eval,
                                  delivered, corrupt)
 
@@ -514,10 +546,14 @@ def build_scan_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
             return None
         return cfg.aggregator.params() if agg_params is None else agg_params
 
+    tapped = metrics_active(cfg.metrics, cfg.guards)
+
     def _scan(params, step, xs):
         carry0 = init_carry(params, K, cfg)
         final, traces = jax.lax.scan(step, carry0, xs)
         state, energy = final[0], final[1]
+        if tapped:       # 4-tuple only when taps materialize (static on cfg)
+            return state, energy, traces, final[-1]
         return state, energy, traces
 
     if data_mode == "prestack":
@@ -635,7 +671,8 @@ def build_chunk_sim(loss_fn: Callable, acc_fn: Callable, opt: Optimizer,
     return chunk
 
 
-def _to_result(state, energy, traces, cfg: SimConfig) -> SimResult:
+def _to_result(state, energy, traces, cfg: SimConfig,
+               mstate=None) -> SimResult:
     """Single end-of-run host readback → legacy ``SimResult``."""
     did = np.asarray(traces.did_eval)
     idx = np.where(did)[0]
@@ -651,6 +688,8 @@ def _to_result(state, energy, traces, cfg: SimConfig) -> SimResult:
         state=state,
         delivered=np.asarray(traces.delivered) if faulty else None,
         corrupted=np.asarray(traces.corrupt) if faulty else None,
+        metrics=(jax.tree_util.tree_map(np.asarray, mstate)
+                 if mstate is not None else None),
     )
 
 
@@ -670,6 +709,7 @@ def _make_stream_runner(loss_fn: Callable, acc_fn: Callable,
                                cfg.local_iters, cfg.batch_size)
     raw = build_chunk_sim(loss_fn, acc_fn, opt, cfg, cell, K, policy_fn)
     hoist = raw.hoist
+    tapped = metrics_active(cfg.metrics, cfg.guards)
     chunk_fn = jax.jit(raw)
     ts_full = jnp.arange(T, dtype=jnp.int32)
     pol = (jax.jit(jax.vmap(lambda t, h: policy_fn(t, h, None)))
@@ -695,7 +735,8 @@ def _make_stream_runner(loss_fn: Callable, acc_fn: Callable,
         state, energy = carry[0], carry[1]
         traces = jax.tree_util.tree_map(
             lambda *xs: jnp.concatenate(xs, axis=0), *traces)
-        return _to_result(state, energy, traces, cfg)
+        return _to_result(state, energy, traces, cfg,
+                          mstate=carry[-1] if tapped else None)
 
     return runner
 
@@ -734,6 +775,8 @@ def make_runner(loss_fn: Callable, acc_fn: Callable,
         return make_sparse_runner(loss_fn, acc_fn, client_data, test_ds,
                                   policy_fn, cell, cfg, opt=opt)
     opt = opt or sgd(cfg.lr)
+    emit_run_manifest("make_runner", cfg,
+                      extra={"path": path, "num_clients": K})
 
     if path == "stream":
         return _make_stream_runner(loss_fn, acc_fn, client_data, test_x,
@@ -743,6 +786,7 @@ def make_runner(loss_fn: Callable, acc_fn: Callable,
                          shard_clients=shard_clients, data_mode=path)
     simulate = jax.jit(sim)
     policy_pre = jax.jit(sim.hoisted_policy) if sim.split_policy else None
+    tapped = metrics_active(cfg.metrics, cfg.guards)
 
     if path == "device":
         store = from_client_datasets(client_data)
@@ -756,10 +800,11 @@ def make_runner(loss_fn: Callable, acc_fn: Callable,
             key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
             h_rounds = jnp.swapaxes(h_all, 0, 1)
             pw = policy_pre(h_rounds) if policy_pre is not None else None
-            state, energy, traces = simulate(
-                params, store, data_key, h_rounds, key, test_x, test_y,
-                pw_all=pw)
-            return _to_result(state, energy, traces, cfg)
+            with get_telemetry().span("engine.execute"):
+                out = simulate(params, store, data_key, h_rounds, key,
+                               test_x, test_y, pw_all=pw)
+            return _to_result(out[0], out[1], out[2], cfg,
+                              mstate=out[3] if tapped else None)
     else:
         xb_all, yb_all = stack_round_batches(client_data, cfg)
 
@@ -767,10 +812,11 @@ def make_runner(loss_fn: Callable, acc_fn: Callable,
             key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
             h_rounds = jnp.swapaxes(h_all, 0, 1)
             pw = policy_pre(h_rounds) if policy_pre is not None else None
-            state, energy, traces = simulate(
-                params, xb_all, yb_all, h_rounds, key, test_x, test_y,
-                pw_all=pw)
-            return _to_result(state, energy, traces, cfg)
+            with get_telemetry().span("engine.execute"):
+                out = simulate(params, xb_all, yb_all, h_rounds, key,
+                               test_x, test_y, pw_all=pw)
+            return _to_result(out[0], out[1], out[2], cfg,
+                              mstate=out[3] if tapped else None)
 
     return runner
 
@@ -805,9 +851,12 @@ class MatrixResult(NamedTuple):
     energy: np.ndarray       # [..., K] cumulative per-client Joules
     e_round: np.ndarray      # [..., T, K]
     participation: np.ndarray  # [..., T, K]
+    # per-lane MetricsState (leading axes = the vmapped ones) when
+    # cfg.metrics enables taps; None otherwise.
+    metrics: Any = None
 
 
-def _matrix_result(energy, traces) -> MatrixResult:
+def _matrix_result(energy, traces, mstate=None) -> MatrixResult:
     did = np.asarray(traces.did_eval)
     # did_eval depends only on t — identical across lanes; collapse to [T].
     did_t = did.reshape(-1, did.shape[-1])[0]
@@ -819,6 +868,8 @@ def _matrix_result(energy, traces) -> MatrixResult:
         energy=np.asarray(energy),
         e_round=np.asarray(traces.e_round),
         participation=np.asarray(traces.mask),
+        metrics=(jax.tree_util.tree_map(np.asarray, mstate)
+                 if mstate is not None else None),
     )
 
 
@@ -863,8 +914,13 @@ def run_seed_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
         fan = jax.jit(jax.vmap(
             lambda key, h: simulate(init_params, store, data_key, h, key,
                                     test_x, test_y)))
-    _, energy, traces = fan(keys, h_rounds)
-    return _matrix_result(energy, traces)
+    emit_run_manifest("run_seed_matrix", cfg,
+                      extra={"lanes": len(seeds), "num_clients": K})
+    with get_telemetry().span("seed_matrix.execute"):
+        out = fan(keys, h_rounds)
+    tapped = metrics_active(cfg.metrics, cfg.guards)
+    return _matrix_result(out[1], out[2],
+                          mstate=out[3] if tapped else None)
 
 
 def run_scenario_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
@@ -904,5 +960,11 @@ def run_scenario_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
 
     lanes = jax.vmap(one, in_axes=(None, 0, 0))        # scenario lanes
     fan = jax.jit(jax.vmap(lanes, in_axes=(0, None, None)))  # ρ axis
-    _, energy, traces = fan(jnp.asarray(rhos, jnp.float32), keys, h_rounds)
-    return _matrix_result(energy, traces)
+    emit_run_manifest("run_scenario_matrix", cfg,
+                      extra={"rhos": len(rhos), "lanes": len(seeds),
+                             "num_clients": K})
+    with get_telemetry().span("scenario_matrix.execute"):
+        out = fan(jnp.asarray(rhos, jnp.float32), keys, h_rounds)
+    tapped = metrics_active(cfg.metrics, cfg.guards)
+    return _matrix_result(out[1], out[2],
+                          mstate=out[3] if tapped else None)

@@ -337,6 +337,9 @@ class FaultMatrixResult(NamedTuple):
     energy: dict                 # {...: [R, K]} cumulative Joules
     delivered: dict              # {...: [R, T, K]} realized deliveries
     finite_final: dict           # {...: [R] bool} final params all finite
+    # {...: MetricsState with [R]-leading leaves} when cfg.metrics enables
+    # taps; None otherwise.
+    metrics: Any = None
 
 
 def run_fault_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
@@ -379,10 +382,17 @@ def run_fault_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
     rates_arr = jnp.asarray(list(rates), jnp.float32)
     fp_stack = jax.vmap(lambda r: scale_params(base_fp, r))(rates_arr)
 
+    from ..obs.taps import metrics_active
+    from ..obs.telemetry import emit_run_manifest, get_telemetry
+    emit_run_manifest("run_fault_matrix", cfg,
+                      extra={"rates": len(rates), "num_clients": int(K)})
+
     out_acc, out_loss, out_energy, out_del, out_fin = {}, {}, {}, {}, {}
+    out_ms: dict = {}
     eval_rounds = None
     for name, guards in (("unguarded", None), ("guarded", guard)):
         cfg_g = _dc.replace(cfg, guards=guards)
+        tapped = metrics_active(cfg_g.metrics, cfg_g.guards)
         sim = build_scan_sim(loss_fn, acc_fn, opt, cfg_g, cell, K, policy_fn,
                              shard_clients=False,
                              data_mode=("prestack" if path == "prestack"
@@ -390,7 +400,11 @@ def run_fault_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
         fan = jax.jit(jax.vmap(
             lambda fp: sim(init_params, data[0], data[1], h_rounds, key,
                            test_x, test_y, fault_params=fp)))
-        state, energy, traces = fan(fp_stack)
+        with get_telemetry().span("fault_matrix.execute"):
+            out = fan(fp_stack)
+        state, energy, traces = out[0], out[1], out[2]
+        if tapped:
+            out_ms[name] = jax.tree_util.tree_map(np.asarray, out[3])
         did = np.asarray(traces.did_eval)
         idx = np.where(did.reshape(-1, did.shape[-1])[0])[0]
         eval_rounds = idx
@@ -408,4 +422,5 @@ def run_fault_matrix(init_params, loss_fn, acc_fn, client_data, test_ds,
     return FaultMatrixResult(rates=np.asarray(rates_arr), acc=out_acc,
                              loss=out_loss, eval_rounds=eval_rounds,
                              energy=out_energy, delivered=out_del,
-                             finite_final=out_fin)
+                             finite_final=out_fin,
+                             metrics=out_ms or None)

@@ -37,7 +37,9 @@ See ``docs/robustness.md`` for the protocol details.
 """
 from __future__ import annotations
 
+import json
 import os
+import time
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -50,11 +52,15 @@ from ..core.selection import as_policy_fn
 from ..data.device import (StreamingSampler, data_stream_key,
                            from_client_datasets)
 from ..data.synthetic import Dataset
+from ..obs.taps import metrics_active
+from ..obs.telemetry import (config_fingerprint, emit_run_manifest,
+                             env_fingerprint, get_telemetry)
 from ..optim import Optimizer, sgd
 from .engine import (RoundTrace, SimConfig, SimResult, build_chunk_sim,
                      init_carry, resolve_data_path)
 
-__all__ = ["run_resumable", "segment_bounds", "completed_segments"]
+__all__ = ["run_resumable", "segment_bounds", "completed_segments",
+           "read_segment_manifest"]
 
 
 def segment_bounds(rounds: int, stride: int) -> list:
@@ -76,6 +82,7 @@ def _fingerprint(cfg: SimConfig, num_clients: int, data_path: str) -> dict:
         "data_path": data_path, "num_clients": num_clients,
         "checkpoint_every": cfg.checkpoint_every,
         "faults": repr(cfg.faults), "guards": repr(cfg.guards),
+        "metrics": repr(cfg.metrics),
     }
 
 
@@ -107,6 +114,26 @@ def _save_segment(ckpt_dir: str, i: int, carry, trace, meta: dict) -> None:
 def _load_trace(ckpt_dir: str, i: int) -> RoundTrace:
     data = np.load(_seg_base(ckpt_dir, i) + "_trace.npz")
     return RoundTrace(**{f: data[f] for f in RoundTrace._fields})
+
+
+def _manifest_path(ckpt_dir: str) -> str:
+    return os.path.join(ckpt_dir, "manifest.jsonl")
+
+
+def _append_segment_manifest(ckpt_dir: str, entry: dict) -> None:
+    with open(_manifest_path(ckpt_dir), "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+
+
+def read_segment_manifest(ckpt_dir: str) -> list:
+    """All segment-manifest entries recorded in ``ckpt_dir``, in append
+    order.  A killed-and-resumed run leaves one entry per *executed*
+    segment, so rerun segments appear twice — audit trails keep both."""
+    path = _manifest_path(ckpt_dir)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
 
 
 def run_resumable(init_params: Any,
@@ -142,6 +169,12 @@ def run_resumable(init_params: Any,
     bounds = segment_bounds(T, cfg.checkpoint_every or cfg.eval_every)
     os.makedirs(ckpt_dir, exist_ok=True)
     fp = _fingerprint(cfg, K, path)
+    cfg_sha = config_fingerprint(cfg)
+    env_fp = env_fingerprint()
+    stride = cfg.checkpoint_every or cfg.eval_every
+    emit_run_manifest("run_resumable", cfg,
+                      extra={"path": path, "num_clients": K,
+                             "ckpt_dir": ckpt_dir, "segments": len(bounds)})
 
     test_x = test_ds.x[: cfg.eval_batch]
     test_y = test_ds.y[: cfg.eval_batch]
@@ -182,18 +215,31 @@ def run_resumable(init_params: Any,
 
     # --- run the remaining segments ----------------------------------------
     fresh = 0
+    tel = get_telemetry()
     for i in range(done, len(bounds)):
         t0, t1 = bounds[i]
         pw_c = jax.tree_util.tree_map(lambda p: p[t0:t1], pw_full)
-        if path == "device":
-            carry, tr = chunk_fn(carry, ts_full[t0:t1], h_rounds[t0:t1],
-                                 pw_c, store, data_key, key, test_x, test_y)
-        else:
-            xb, yb = sampler.chunk(t0, t1)
-            carry, tr = chunk_fn(carry, ts_full[t0:t1], h_rounds[t0:t1],
-                                 xb, yb, pw_c, key, test_x, test_y)
-        _save_segment(ckpt_dir, i, carry, tr,
-                      {"t0": t0, "t1": t1, "segment": i, "fingerprint": fp})
+        t_start = time.perf_counter()
+        with tel.span("resume.segment"):
+            if path == "device":
+                carry, tr = chunk_fn(carry, ts_full[t0:t1], h_rounds[t0:t1],
+                                     pw_c, store, data_key, key,
+                                     test_x, test_y)
+            else:
+                xb, yb = sampler.chunk(t0, t1)
+                carry, tr = chunk_fn(carry, ts_full[t0:t1], h_rounds[t0:t1],
+                                     xb, yb, pw_c, key, test_x, test_y)
+            # _save_segment's np.asarray readback forces device sync, so the
+            # wall time below covers execution, not just dispatch.
+            _save_segment(ckpt_dir, i, carry, tr,
+                          {"t0": t0, "t1": t1, "segment": i,
+                           "fingerprint": fp})
+        _append_segment_manifest(ckpt_dir, {
+            "segment": i, "t0": t0, "t1": t1, "seed": cfg.seed,
+            "stride": stride, "config_sha": cfg_sha, "fingerprint": env_fp,
+            "wall_s": time.perf_counter() - t_start,
+            "written_unix": time.time(),
+        })
         traces.append(tr)
         fresh += 1
         if stop_after_segment is not None and fresh >= stop_after_segment \
@@ -201,19 +247,23 @@ def run_resumable(init_params: Any,
             return None                                # simulated kill
 
     state, energy = carry[0], carry[1]
+    mstate = (carry[-1]
+              if metrics_active(cfg.metrics, cfg.guards) else None)
     trace = jax.tree_util.tree_map(
         lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0),
         *traces)
 
     if cfg.eval_mode == "replay":
         return _replay_result(state, energy, trace, cfg, bounds, ckpt_dir,
-                              like, loss_fn, acc_fn, test_x, test_y)
+                              like, loss_fn, acc_fn, test_x, test_y,
+                              mstate=mstate)
     from .engine import _to_result
-    return _to_result(state, energy, trace, cfg)
+    return _to_result(state, energy, trace, cfg, mstate=mstate)
 
 
 def _replay_result(state, energy, trace, cfg: SimConfig, bounds, ckpt_dir,
-                   like, loss_fn, acc_fn, test_x, test_y) -> SimResult:
+                   like, loss_fn, acc_fn, test_x, test_y,
+                   mstate=None) -> SimResult:
     """Post-hoc strided evals: load every segment-boundary checkpoint's
     global params and evaluate them in one batched device call — the
     replacement for the in-scan ``lax.cond`` eval (which executes both
@@ -241,4 +291,6 @@ def _replay_result(state, energy, trace, cfg: SimConfig, bounds, ckpt_dir,
         state=state,
         delivered=np.asarray(trace.delivered) if faulty else None,
         corrupted=np.asarray(trace.corrupt) if faulty else None,
+        metrics=(jax.tree_util.tree_map(np.asarray, mstate)
+                 if mstate is not None else None),
     )

@@ -47,6 +47,8 @@ from ..core.selection import (as_policy_fn, participant_bucket,
                               policy_blend, policy_ledger_ok)
 from ..data.device import (DeviceDataStore, data_stream_key,
                            from_client_datasets, gather_participant_rounds)
+from ..obs.taps import merge_metrics, metrics_active
+from ..obs.telemetry import emit_run_manifest, get_telemetry
 from ..optim import Optimizer, sgd
 from .state import AggParams, AggregatorConfig
 
@@ -115,6 +117,9 @@ class SchemeMatrixResult(NamedTuple):
     energy: np.ndarray             # [V, L, S, K] cumulative Joules
     energy_timeline: np.ndarray    # [V, L, S, T] cumulative total Joules
     participation: np.ndarray      # [V, L, S, T, K]
+    # per-lane MetricsState ([V, L, S]-leading leaves) when cfg.metrics
+    # enables taps; None otherwise.
+    metrics: Any = None
 
 
 def stack_stores(stores: Sequence[DeviceDataStore]) -> DeviceDataStore:
@@ -210,6 +215,11 @@ def run_scheme_matrix(init_params, loss_fn: Callable, acc_fn: Callable,
     h_rounds = jnp.swapaxes(h_stack, 1, 2)              # [S, T, K]
     sel_eye = jnp.eye(L, dtype=jnp.float32)
     ap_stack = _stack_agg_params(schemes)
+    tapped = metrics_active(run_cfg.metrics, run_cfg.guards)
+    emit_run_manifest("run_scheme_matrix", run_cfg,
+                      extra={"path": participation, "schemes": L,
+                             "lanes": len(seeds), "severities": V,
+                             "num_clients": K})
 
     if participation == "dense":
         def one(sel, ap, key, h, store):
@@ -224,8 +234,10 @@ def run_scheme_matrix(init_params, loss_fn: Callable, acc_fn: Callable,
         scheme_lanes = jax.vmap(seed_lanes, in_axes=(0, 0, None, None, None))
         fan = jax.jit(jax.vmap(scheme_lanes,
                                in_axes=(None, None, None, None, 0)))
-        _, energy, traces = fan(sel_eye, ap_stack, keys, h_rounds,
-                                store_stack)
+        with get_telemetry().span("scheme_matrix.execute"):
+            out = fan(sel_eye, ap_stack, keys, h_rounds, store_stack)
+        energy, traces = out[1], out[2]
+        ms = out[3] if tapped else None
         e_round = np.asarray(traces.e_round)            # [V, L, S, T, K]
         ev = _collapse_evals(np.asarray(traces.did_eval))
         return SchemeMatrixResult(
@@ -236,6 +248,8 @@ def run_scheme_matrix(init_params, loss_fn: Callable, acc_fn: Callable,
             energy=np.asarray(energy),
             energy_timeline=np.cumsum(e_round.sum(axis=-1), axis=-1),
             participation=np.asarray(traces.mask),
+            metrics=(jax.tree_util.tree_map(np.asarray, ms)
+                     if ms is not None else None),
         )
 
     # ---- sparse path ------------------------------------------------------
@@ -263,26 +277,35 @@ def run_scheme_matrix(init_params, loss_fn: Callable, acc_fn: Callable,
             expected = max(expected, float(jnp.max(jnp.sum(probs, -1))))
         bucket = participant_bucket(expected, cap=K)
 
+    ltap = metrics_active(run_cfg.metrics, None, parts="ledger")
+    ttap = metrics_active(run_cfg.metrics, run_cfg.guards, parts="train")
+
     def one_sparse(sel, ap, key, h, store):
         pol = policy_blend(fns, sel)
         phase_a = build_participation_program(pol, run_cfg, cell, K, bucket)
-        last_tx, energy, ptr = phase_a(h, key)
+        pa = phase_a(h, key)
+        energy, ptr = pa[1], pa[2]
+        ms_a = pa[3] if ltap else None
         xb, yb = gather_participant_rounds(store, data_key, ptr.part_idx,
                                            run_cfg.local_iters,
                                            run_cfg.batch_size)
         train = build_sparse_train_program(loss_fn, acc_fn, opt, run_cfg)
-        _, (accs, losses, dids) = train(
+        tout = train(
             init_params, xb, yb, ptr.valid, ptr.anchor_slot, jnp.int32(K),
             test_x, test_y, ptr.delivered, ptr.corrupt, ptr.stale,
             ptr.prob, ap)
-        return energy, accs, losses, dids, ptr
+        accs, losses, dids = tout[1]
+        ms_b = tout[2] if ttap else None
+        # None halves are pytree structure — they vmap as absent leaves
+        return energy, accs, losses, dids, ptr, merge_metrics(ms_a, ms_b)
 
     seed_lanes = jax.vmap(one_sparse, in_axes=(None, None, 0, 0, None))
     scheme_lanes = jax.vmap(seed_lanes, in_axes=(0, 0, None, None, None))
     fan = jax.jit(jax.vmap(scheme_lanes,
                            in_axes=(None, None, None, None, 0)))
-    energy, accs, losses, dids, ptr = fan(sel_eye, ap_stack, keys,
-                                          h_rounds, store_stack)
+    with get_telemetry().span("scheme_matrix.execute"):
+        energy, accs, losses, dids, ptr, ms = fan(sel_eye, ap_stack, keys,
+                                                  h_rounds, store_stack)
     n_tx = np.asarray(ptr.n_tx)
     if (n_tx > bucket).any():
         raise RuntimeError(
@@ -308,4 +331,6 @@ def run_scheme_matrix(init_params, loss_fn: Callable, acc_fn: Callable,
         energy=np.asarray(energy),
         energy_timeline=np.cumsum(e_round.sum(axis=-1), axis=-1),
         participation=parts,
+        metrics=(jax.tree_util.tree_map(np.asarray, ms)
+                 if (ltap or ttap) else None),
     )

@@ -31,6 +31,8 @@ from ..data.device import (StreamingSampler, data_stream_key,
                            sample_round_client_stream)
 from ..data.pipeline import BatchIterator, client_batches
 from ..data.synthetic import Dataset
+from ..obs.taps import (MetricsSpec, init_metrics, merge_metrics,
+                        metrics_active, update_ledger_taps, update_train_taps)
 from ..optim import Optimizer, sgd
 from .engine import (SimConfig, SimResult, apply_round_decision,
                      empty_client_batches, make_local_train,
@@ -49,7 +51,8 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, local_iters: int,
                   num_clients: int, local_mode: str = "continuous",
                   faults: FaultConfig | None = None,
                   guards: GuardConfig | None = None,
-                  aggregator: AggregatorConfig | None = None):
+                  aggregator: AggregatorConfig | None = None,
+                  metrics: MetricsSpec | None = None):
     """Build the jitted per-round transition over stacked client states.
 
     With faults/guards the transition takes the fault pipeline's extra
@@ -59,16 +62,23 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, local_iters: int,
     the robustness layer too).  With ``aggregator`` set the transition also
     takes the round's nominal policy ``probs`` and applies the pluggable
     scheme aggregation instead of the paper's 1/K averaging.
+
+    When ``metrics`` enables any train tap the transition additionally takes
+    the running :class:`~repro.obs.taps.MetricsState` and returns
+    ``(state, metrics_state)`` instead of the bare state (static on the
+    spec, so the untapped signature is unchanged).
     """
     vtrain = make_local_train(loss_fn, opt)
     fparams = faults.params() if faults is not None else None
     aparams = aggregator.params() if aggregator is not None else None
+    ttap = metrics_active(metrics, guards, parts="train")
 
     @jax.jit
     def fl_round(state: FLState, mask: jax.Array, xb: jax.Array,
                  yb: jax.Array, delivered: jax.Array | None = None,
                  corrupt: jax.Array | None = None,
-                 probs: jax.Array | None = None) -> FLState:
+                 probs: jax.Array | None = None,
+                 mstate=None) -> FLState:
         landed = mask if delivered is None else delivered
         client = vtrain(state.client_params, xb, yb)
         if local_mode == "participants":
@@ -98,6 +108,14 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, local_iters: int,
         else:
             new_global = masked_aggregate(state.global_params, deltas,
                                           landed, num_clients)
+        if ttap:
+            p = (jnp.zeros((num_clients,), jnp.float32) if probs is None
+                 else probs)
+            ms = update_train_taps(
+                mstate, metrics, deltas=deltas, delivered=landed,
+                staleness=state.round - state.last_tx, probs=p,
+                num_clients=num_clients, guards=guards, agg_params=aparams)
+            return broadcast_to_participants(state, new_global, landed), ms
         return broadcast_to_participants(state, new_global, landed)
 
     return fl_round
@@ -146,8 +164,23 @@ def run_simulation_legacy(init_params: Any,
     state = init_fl_state(init_params, K)
     round_fn = make_round_fn(loss_fn, opt, cfg.local_iters, K,
                              local_mode=cfg.local_mode, faults=cfg.faults,
-                             guards=cfg.guards, aggregator=cfg.aggregator)
+                             guards=cfg.guards, aggregator=cfg.aggregator,
+                             metrics=cfg.metrics)
     base_key = jax.random.PRNGKey(cfg.seed)
+
+    # metrics taps: the ledger half accumulates host-side via its own jitted
+    # update (same full-[K] vector ops as the scan engines — bit-identical
+    # integer counters); the train half rides through fl_round
+    ltap = metrics_active(cfg.metrics, None, parts="ledger")
+    ttap = metrics_active(cfg.metrics, cfg.guards, parts="train")
+    ms_l = init_metrics(cfg.metrics, K, None, parts="ledger")
+    ms_t = init_metrics(cfg.metrics, K, cfg.guards, parts="train")
+    if ltap:
+        ledger_tap = jax.jit(lambda ms, m, f, eb, er, st, d:
+                             update_ledger_taps(ms, cfg.metrics, mask=m,
+                                                forced=f, e_base=eb,
+                                                e_round=er, staleness=st,
+                                                delivered=d))
 
     # split the policy eval from the decision so the nominal probs (pre
     # aging-boost) are available to scheme aggregation — mask/forced/w/e
@@ -222,6 +255,7 @@ def run_simulation_legacy(init_params: Any,
         # --- policy + autonomous decisions + energy ledger (eq. 5) ---------
         probs, mask, forced, w, e_round = decide(jnp.int32(t), h_all[:, t],
                                                  state)
+        e_base = e_round     # decision energy before the fault pipeline
         # --- fault pipeline (availability → crash → lossy uplink) ----------
         if cfg.faults is not None:
             out, fstate = fault_step(jnp.int32(t), mask, e_round, fstate)
@@ -234,9 +268,17 @@ def run_simulation_legacy(init_params: Any,
         energy += np.asarray(e_round)
         energy_tl[t] = energy.sum()
         parts[t] = np.asarray(mask)
+        if ltap:
+            ms_l = ledger_tap(ms_l, mask, forced, e_base, e_round,
+                              state.round - state.last_tx,
+                              mask if delivered is None else delivered)
 
         # --- one protocol round --------------------------------------------
-        state = round_fn(state, mask, xb, yb, delivered, corrupt, probs)
+        if ttap:
+            state, ms_t = round_fn(state, mask, xb, yb, delivered, corrupt,
+                                   probs, ms_t)
+        else:
+            state = round_fn(state, mask, xb, yb, delivered, corrupt, probs)
 
         if t % cfg.eval_every == 0 or t == cfg.rounds - 1:
             a, l = eval_fn(state.global_params)
@@ -245,7 +287,10 @@ def run_simulation_legacy(init_params: Any,
             eval_rounds.append(t)
 
     faulty = cfg.faults is not None
+    ms = merge_metrics(ms_l, ms_t)
     return SimResult(np.asarray(accs), np.asarray(losses),
                      np.asarray(eval_rounds), energy, energy_tl, parts, state,
                      delivered=delivered_tl if faulty else None,
-                     corrupted=corrupt_tl if faulty else None)
+                     corrupted=corrupt_tl if faulty else None,
+                     metrics=(jax.tree_util.tree_map(np.asarray, ms)
+                              if ms is not None else None))

@@ -59,6 +59,9 @@ from ..core.selection import (as_policy_fn, participant_bucket,
 from ..data.device import (DeviceDataStore, data_stream_key,
                            from_client_datasets, gather_participant_rounds)
 from ..data.synthetic import Dataset
+from ..obs.taps import (MetricsState, init_metrics, merge_metrics,
+                        metrics_active, update_train_taps)
+from ..obs.telemetry import emit_run_manifest, get_telemetry
 from ..optim import Optimizer, sgd
 from .faults import apply_faults, corrupt_deltas, init_fault_state
 from .state import (FLState, guarded_subset_aggregate,
@@ -118,6 +121,42 @@ class ParticipationTrace(NamedTuple):
     stale: jax.Array        # [P] int32 staleness Δτ at transmission time
     prob: jax.Array         # [P] f32 nominal policy prob (pre aging-boost)
     n_tx: jax.Array         # int32 realized transmitter count (overflow check)
+    # metrics-tap lanes, emitted only when cfg.metrics enables ledger taps
+    # (the ledger accumulators reduce over these post-scan — no per-round
+    # [K]-vector tap work rides in the sequential scan)
+    forced_p: Any = None    # [P] bool — Δ_k-forced transmission
+    base_p: Any = None      # [P] f32 — decision energy before faults
+
+
+def _reduce_ledger_taps(tr: ParticipationTrace, spec, num_clients: int,
+                        rounds: int) -> MetricsState:
+    """Batched post-scan reduction of the ledger taps from the ``[T, P]``
+    trace lanes — one scatter/sum pass instead of per-round accumulator ops
+    inside the sequential scan (which costs ~20% on the tiny-model sparse
+    path, where phase A dominates).
+
+    The pad sentinel ``K`` in ``part_idx`` is out of bounds, so
+    ``mode="drop"`` scatters discard padded lanes; integer taps stay
+    bit-exact with the dense engine's in-scan accumulation (participants
+    are exactly the mask fires — the runner hard-errors on bucket
+    overflow).  Float energy sums change association order only.
+    """
+    tx = stale = ec = None
+    if spec.participation:
+        tx = jnp.zeros((num_clients,), jnp.int32).at[tr.part_idx.ravel()].add(
+            tr.valid.ravel().astype(jnp.int32), mode="drop")
+    if spec.staleness_hist:
+        b = jnp.clip(tr.stale.astype(jnp.int32), 0, spec.staleness_bins - 1)
+        stale = jnp.zeros((spec.staleness_bins,), jnp.int32).at[b.ravel()].add(
+            tr.delivered.ravel().astype(jnp.int32), mode="drop")
+    if spec.energy_by_cause:
+        e = tr.e_p.astype(jnp.float32)          # 0 on padded lanes
+        f = tr.forced_p.astype(jnp.float32)
+        retry = jnp.maximum(e - tr.base_p.astype(jnp.float32), 0.0)
+        ec = jnp.stack([jnp.sum(e * (1.0 - f)), jnp.sum(e * f),
+                        jnp.sum(retry)])
+    return MetricsState(tx_count=tx, stale_hist=stale, energy_cause=ec,
+                        rounds=jnp.asarray(rounds, jnp.int32))
 
 
 def build_participation_program(policy_fn, cfg, cell: CellConfig,
@@ -145,6 +184,9 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
     K = num_clients
     faults = cfg.faults
     fparams = faults.params() if faults is not None else None
+    # ledger taps reduce post-scan from trace lanes (split accumulation: the
+    # train taps live in phase B); guards are irrelevant to the ledger subset
+    ltap = metrics_active(cfg.metrics, None, parts="ledger")
 
     def program(h_rounds, base_key):
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
@@ -155,16 +197,16 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
             pw_all = (jnp.zeros((cfg.rounds, 0)),) * 2
 
         def step(carry, xs):
+            last_tx, anchor_slot, energy = carry[0], carry[1], carry[2]
             if faults is not None:
-                last_tx, anchor_slot, energy, fstate = carry
-            else:
-                last_tx, anchor_slot, energy = carry
+                fstate = carry[3]
             t, h_t, probs, w = xs
             view = _DecisionView(round=t, last_tx=last_tx)
             if not hoist:
                 probs, w = policy_fn(t, h_t, view)
             mask, forced, w, e_round = apply_round_decision(
                 probs, w, t, h_t, view, base_key, cfg, cell, K)
+            e_base = e_round        # decision energy before the fault pipeline
             # fault pipeline on the same salted streams as the dense engine:
             # masks above stay untouched, only delivery/energy change
             if faults is not None:
@@ -189,12 +231,18 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
             # last_tx/anchor untouched, so its staleness keeps growing
             last_tx = jnp.where(delivered > 0, t, last_tx)
             anchor_slot = jnp.where(delivered > 0, t + 1, anchor_slot)
-            carry = ((last_tx, anchor_slot, energy, fstate)
-                     if faults is not None
-                     else (last_tx, anchor_slot, energy))
-            return carry, ParticipationTrace(idx, valid, slot_p, e_p,
-                                             del_p, cor_p, stale_p, prob_p,
-                                             n_tx)
+            carry = (last_tx, anchor_slot, energy)
+            if faults is not None:
+                carry = carry + (fstate,)
+            tr = ParticipationTrace(idx, valid, slot_p, e_p, del_p, cor_p,
+                                    stale_p, prob_p, n_tx)
+            if ltap:
+                # ledger-tap lanes ride the trace instead of the carry: the
+                # accumulators reduce over [T, P] post-scan, keeping the
+                # sequential scan free of per-round [K]-vector tap work
+                tr = tr._replace(forced_p=valid & (forced[kc] > 0),
+                                 base_p=jnp.where(valid, e_base[kc], 0.0))
+            return carry, tr
 
         carry0 = (jnp.zeros((K,), jnp.int32), jnp.zeros((K,), jnp.int32),
                   jnp.zeros((K,), jnp.float32))
@@ -202,6 +250,9 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
             carry0 = carry0 + (init_fault_state(K),)
         final, tr = jax.lax.scan(
             step, carry0, (ts, h_rounds, pw_all[0], pw_all[1]))
+        if ltap:     # 4-tuple only when ledger taps materialize
+            return final[0], final[2], tr, _reduce_ledger_taps(
+                tr, cfg.metrics, K, cfg.rounds)
         return final[0], final[2], tr
 
     return program
@@ -224,7 +275,8 @@ def _train_cache_key(cfg, opt_token, loss_fn, acc_fn, params, sample_shape,
     return (bucket, cfg.rounds, cfg.local_iters, cfg.batch_size,
             cfg.eval_every, opt_token, id(loss_fn), id(acc_fn), treedef,
             shapes, tuple(sample_shape), tuple(test_shape),
-            repr(cfg.faults), repr(cfg.guards), repr(cfg.aggregator))
+            repr(cfg.faults), repr(cfg.guards), repr(cfg.aggregator),
+            repr(cfg.metrics))
 
 
 def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
@@ -258,6 +310,10 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
     guards = cfg.guards
     agg = cfg.aggregator
     fparams = faults.params() if faults is not None else None
+    # train taps (guard events / weight stats) accumulate over the [P]
+    # bucket rows here; counts match the dense engine exactly, float
+    # reductions to associativity (split accumulation with phase A)
+    ttap = metrics_active(cfg.metrics, guards, parts="train")
 
     def program(params, xb_all, yb_all, valid_all, slot_all, num_clients,
                 test_x, test_y, delivered_all=None, corrupt_all=None,
@@ -287,7 +343,8 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
             del p
             return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
 
-        def step(hist, xs):
+        def step(carry, xs):
+            hist = carry[0] if ttap else carry
             t, xb, yb, valid, slot, deliv, corr, stale, prob = xs
             g_t = jax.tree_util.tree_map(lambda h: h[t], hist)
             anchors = jax.tree_util.tree_map(lambda h: h[slot], hist)
@@ -309,21 +366,37 @@ def build_sparse_train_program(loss_fn: Callable, acc_fn: Callable,
                 lambda h, g: h.at[t + 1].set(g), hist, g_new)
             do_eval = jnp.logical_or(t % cfg.eval_every == 0, t == T - 1)
             acc, loss = jax.lax.cond(do_eval, eval_now, skip_eval, g_new)
+            if ttap:
+                ms = update_train_taps(
+                    carry[1], cfg.metrics, deltas=deltas, delivered=deliv,
+                    staleness=stale, probs=prob, num_clients=num_clients,
+                    guards=guards, agg_params=ap)
+                return (hist, ms), (acc, loss, do_eval)
             return hist, (acc, loss, do_eval)
 
         ts = jnp.arange(T, dtype=jnp.int32)
-        hist, traces = jax.lax.scan(
-            step, hist0, (ts, xb_all, yb_all, valid_all, slot_all,
-                          delivered_all, corrupt_all, stale_all, probs_all))
+        carry0 = ((hist0, init_metrics(cfg.metrics, 0, guards,
+                                       parts="train"))
+                  if ttap else hist0)
+        final, traces = jax.lax.scan(
+            step, carry0, (ts, xb_all, yb_all, valid_all, slot_all,
+                           delivered_all, corrupt_all, stale_all, probs_all))
+        hist = final[0] if ttap else final
         g_final = jax.tree_util.tree_map(lambda h: h[T], hist)
+        if ttap:     # 3-tuple only when train taps materialize
+            return g_final, traces, final[1]
         return g_final, traces
 
     return program
 
 
 def _cached_train_program(key, builder: Callable) -> Callable:
+    tel = get_telemetry()
     if key not in _TRAIN_CACHE:
+        tel.inc("sparse.train_cache_miss")
         _TRAIN_CACHE[key] = jax.jit(builder())
+    else:
+        tel.inc("sparse.train_cache_hit")
     return _TRAIN_CACHE[key]
 
 
@@ -396,22 +469,32 @@ def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
     test_x = test_ds.x[: cfg.eval_batch]
     test_y = test_ds.y[: cfg.eval_batch]
     T = cfg.rounds
+    ltap = metrics_active(cfg.metrics, None, parts="ledger")
+    ttap = metrics_active(cfg.metrics, cfg.guards, parts="train")
+    tel = get_telemetry()
+    emit_run_manifest("make_sparse_runner", cfg, extra={"num_clients": K})
     phase_a: dict = {}
     gather = jax.jit(lambda pidx: gather_participant_rounds(
         store, data_key, pidx, cfg.local_iters, cfg.batch_size))
 
     def _phase_a(bucket: int, h_rounds, key):
         if bucket not in phase_a:
+            tel.inc("sparse.phase_a_cache_miss")
             phase_a[bucket] = jax.jit(build_participation_program(
                 policy_fn, cfg, cell, K, bucket))
-        return phase_a[bucket](h_rounds, key)
+        else:
+            tel.inc("sparse.phase_a_cache_hit")
+        with tel.span("sparse.phase_a"):
+            return phase_a[bucket](h_rounds, key)
 
     def runner(params, h_all, seed: int | None = None) -> SimResult:
         key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
         h_rounds = jnp.swapaxes(h_all, 0, 1)
         bucket = cfg.participant_bucket or _auto_bucket(policy_fn, h_rounds,
                                                         cfg, K)
-        last_tx, energy, ptr = _phase_a(bucket, h_rounds, key)
+        pa = _phase_a(bucket, h_rounds, key)
+        last_tx, energy, ptr = pa[0], pa[1], pa[2]
+        ms_a = pa[3] if ltap else None
         n_tx = np.asarray(ptr.n_tx)
         if (n_tx > bucket).any():
             if cfg.overflow == "error":
@@ -429,16 +512,21 @@ def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
             grown = min(grown, K)
             _warn_spill_once(bucket, grown, int(n_tx.max()))
             bucket = grown
-            last_tx, energy, ptr = _phase_a(bucket, h_rounds, key)
+            pa = _phase_a(bucket, h_rounds, key)
+            last_tx, energy, ptr = pa[0], pa[1], pa[2]
+            ms_a = pa[3] if ltap else None
         xb_all, yb_all = gather(ptr.part_idx)
         train = _cached_train_program(
             _train_cache_key(cfg, opt_token, loss_fn, acc_fn, params,
                              store.x.shape[2:], test_x.shape, bucket),
             lambda: build_sparse_train_program(loss_fn, acc_fn, opt, cfg))
-        g_final, (accs, losses, dids) = train(
-            params, xb_all, yb_all, ptr.valid, ptr.anchor_slot,
-            jnp.int32(K), test_x, test_y, ptr.delivered, ptr.corrupt,
-            ptr.stale, ptr.prob)
+        with tel.span("sparse.train"):
+            out = train(
+                params, xb_all, yb_all, ptr.valid, ptr.anchor_slot,
+                jnp.int32(K), test_x, test_y, ptr.delivered, ptr.corrupt,
+                ptr.stale, ptr.prob)
+        g_final, (accs, losses, dids) = out[0], out[1]
+        ms_b = out[2] if ttap else None
 
         # host-side densification of the participant trace (numpy, O(T·K))
         idx = np.asarray(ptr.part_idx)
@@ -463,6 +551,7 @@ def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
             corrupted[t_of[val], idx[val]] = cor[val].astype(np.float32)
         else:
             delivered = corrupted = None
+        ms = merge_metrics(ms_a, ms_b)
         return SimResult(
             test_acc=np.asarray(accs)[ev],
             test_loss=np.asarray(losses)[ev],
@@ -473,6 +562,8 @@ def make_sparse_runner(loss_fn: Callable, acc_fn: Callable,
             state=state,
             delivered=delivered,
             corrupted=corrupted,
+            metrics=(jax.tree_util.tree_map(np.asarray, ms)
+                     if ms is not None else None),
         )
 
     runner.store = store
