@@ -87,6 +87,20 @@ class FaultConfig:
     corrupt_mode: str = "nan"  # "nan" | "inf" | "scale" (static)
     corrupt_scale: float = 100.0
 
+    @classmethod
+    def from_trace(cls, avail, attempts=None, delivered=None,
+                   max_retries: int = 0, **overrides) -> "FaultConfig":
+        """Config-level convenience over :meth:`FaultParams.from_trace`:
+        fit the Markov/loss rates from a trace and return a ready-to-use
+        ``FaultConfig`` (so ``SimConfig(faults=FaultConfig.from_trace(...))``
+        replays the fitted failure world).  ``max_retries`` and any other
+        static field ride through ``overrides``."""
+        fp = FaultParams.from_trace(avail, attempts=attempts,
+                                    delivered=delivered)
+        return cls(p_fail=float(fp.p_fail), p_recover=float(fp.p_recover),
+                   p_loss=float(fp.p_loss), max_retries=max_retries,
+                   **overrides)
+
     def params(self) -> "FaultParams":
         """The traced-parameter view (everything a vmap axis may sweep)."""
         return FaultParams(
@@ -118,6 +132,49 @@ class FaultParams(NamedTuple):
     backoff: jax.Array
     p_corrupt: jax.Array
     corrupt_scale: jax.Array
+
+    @classmethod
+    def from_trace(cls, avail, attempts=None, delivered=None) -> "FaultParams":
+        """Fit the probabilistic fields from an observed trace (MLE).
+
+        ``avail [T, K]`` is an availability history (bool/int — e.g. the
+        :class:`FaultOutcome` ``avail`` lane stacked over rounds, or a real
+        deployment's presence log): the Markov rates are transition
+        frequencies, ``p_fail = #(up→down) / #(up)`` and ``p_recover =
+        #(down→up) / #(down)`` over consecutive round pairs.  With no
+        observed up (resp. down) dwell the clean-world defaults ``0.0`` /
+        ``1.0`` stand.
+
+        ``attempts``/``delivered`` (``[T, K]``, optional, together) fit the
+        uplink loss: every delivered upload ends in exactly one success, so
+        ``p_loss = (Σ attempts − #delivered) / Σ attempts``.
+
+        Everything unobservable from these traces (diurnal modulation,
+        crash/corruption rates, backoff) keeps its clean default — fit what
+        the trace pins down, assume nothing else.
+        """
+        a = np.asarray(avail).astype(bool)
+        if a.ndim != 2:
+            raise ValueError(f"avail must be [T, K], got shape {a.shape}")
+        prev, nxt = a[:-1], a[1:]
+        n_up = int(prev.sum())
+        n_down = int(prev.size - n_up)
+        p_fail = float((prev & ~nxt).sum() / n_up) if n_up else 0.0
+        p_recover = float((~prev & nxt).sum() / n_down) if n_down else 1.0
+        p_loss = 0.0
+        if (attempts is None) != (delivered is None):
+            raise ValueError("attempts and delivered must be given together")
+        if attempts is not None:
+            att = np.asarray(attempts, np.float64)
+            dlv = np.asarray(delivered).astype(bool)
+            if att.shape != dlv.shape:
+                raise ValueError("attempts and delivered shapes differ: "
+                                 f"{att.shape} vs {dlv.shape}")
+            total = float(att.sum())
+            if total > 0:
+                p_loss = float(np.clip((total - dlv.sum()) / total, 0.0, 1.0))
+        return FaultConfig(p_fail=p_fail, p_recover=p_recover,
+                           p_loss=p_loss).params()
 
 
 def scale_params(fp: FaultParams, rate) -> FaultParams:

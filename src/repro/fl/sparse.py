@@ -160,7 +160,8 @@ def _reduce_ledger_taps(tr: ParticipationTrace, spec, num_clients: int,
 
 
 def build_participation_program(policy_fn, cfg, cell: CellConfig,
-                                num_clients: int, bucket: int) -> Callable:
+                                num_clients: int, bucket: int,
+                                hoist_rounds: bool | None = None) -> Callable:
     """Phase A: ``(h_rounds [T, K], base_key) -> (last_tx [K], energy [K],
     ParticipationTrace[T])``.
 
@@ -172,6 +173,20 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
     math is byte-for-byte the dense engine's ``apply_round_decision`` on the
     identical ``fold_in(base_key, t)`` stream, so realized masks and the
     energy ledger match the dense scan bit-wise.
+
+    **Full round hoist**: when the decision itself is round-local — a
+    state_free policy, no fault processes (the Markov availability chain is
+    sequential state) and no ``max_staleness`` forcing (Δ_k reads the
+    ledger) — the serial scan over T disappears entirely: the whole
+    ``[T, K]`` mask/energy matrix comes from one vmap over the horizon and
+    the staleness/anchor ledgers are recovered with two exclusive
+    ``cummax`` passes.  Masks, index sets, anchor slots, staleness and
+    ``last_tx`` are bit-identical to the scanned path (pure integer
+    recurrences); only the energy ledger's summation *order* changes
+    (tolerance-level, like every cross-path energy comparison).
+    ``hoist_rounds`` forces the choice for parity tests: ``True`` raises
+    if the preconditions fail, ``False`` pins the serial scan, ``None``
+    (default) auto-selects.
     """
     from .engine import apply_round_decision  # deferred: engine imports us
 
@@ -187,6 +202,14 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
     # ledger taps reduce post-scan from trace lanes (split accumulation: the
     # train taps live in phase B); guards are irrelevant to the ledger subset
     ltap = metrics_active(cfg.metrics, None, parts="ledger")
+    full_hoist = hoist and faults is None and cfg.max_staleness is None
+    if hoist_rounds is not None:
+        if hoist_rounds and not full_hoist:
+            raise ValueError(
+                "hoist_rounds=True needs a state_free policy, faults=None "
+                "and max_staleness=None (everything else carries sequential "
+                "state through the round scan)")
+        full_hoist = bool(hoist_rounds)
 
     def program(h_rounds, base_key):
         ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
@@ -195,6 +218,55 @@ def build_participation_program(policy_fn, cfg, cell: CellConfig,
                 ts, h_rounds)
         else:  # ledger policy: dummy lanes, the policy runs in the step
             pw_all = (jnp.zeros((cfg.rounds, 0)),) * 2
+
+        if full_hoist:
+            zeros_ltx = jnp.zeros((K,), jnp.int32)
+
+            def decide(t, h_t, probs, w):
+                # the dummy view is never read: max_staleness is None (no
+                # Δ_k forcing) and aging_boost gates on it too
+                view = _DecisionView(round=t, last_tx=zeros_ltx)
+                return apply_round_decision(probs, w, t, h_t, view,
+                                            base_key, cfg, cell, K)
+
+            mask_all, _, _, e_all = jax.vmap(decide)(
+                ts, h_rounds, pw_all[0], pw_all[1])
+            fire = mask_all > 0
+            tsc = ts[:, None]
+            # ledger recurrences as exclusive cumulative maxima: last_tx
+            # before round t = max{s < t : client fired at s} (0 if none),
+            # anchor slot before round t = that + 1 (0 if none) — identical
+            # integers to the scanned where(delivered, t, ...) updates
+            lt_inc = jax.lax.cummax(jnp.where(fire, tsc, 0), axis=0)
+            lt_excl = jnp.concatenate(
+                [jnp.zeros((1, K), jnp.int32), lt_inc[:-1]], axis=0)
+            slot_inc = jax.lax.cummax(jnp.where(fire, tsc + 1, 0), axis=0)
+            slot_excl = jnp.concatenate(
+                [jnp.zeros((1, K), jnp.int32), slot_inc[:-1]], axis=0)
+
+            def compact(t, mask, e_round, probs, lt_prev, slot_prev):
+                idx, valid, n_tx = participants_from_mask(mask, bucket)
+                kc = jnp.clip(idx, 0, K - 1)
+                e_p = jnp.where(valid, e_round[kc], 0.0)
+                tr = ParticipationTrace(
+                    idx, valid,
+                    jnp.where(valid, slot_prev[kc], 0), e_p,
+                    valid, jnp.zeros((bucket,), bool),
+                    jnp.where(valid, t - lt_prev[kc], 0),
+                    jnp.where(valid, probs.astype(jnp.float32)[kc], 0.0),
+                    n_tx)
+                if ltap:   # no forcing, no faults: e_base == e_round
+                    tr = tr._replace(forced_p=jnp.zeros((bucket,), bool),
+                                     base_p=e_p)
+                return tr
+
+            tr = jax.vmap(compact)(ts, mask_all, e_all, pw_all[0],
+                                   lt_excl, slot_excl)
+            energy = jnp.sum(e_all, axis=0)
+            if ltap:
+                return lt_inc[-1], energy, tr, _reduce_ledger_taps(
+                    tr, cfg.metrics, K, cfg.rounds)
+            return lt_inc[-1], energy, tr
 
         def step(carry, xs):
             last_tx, anchor_slot, energy = carry[0], carry[1], carry[2]

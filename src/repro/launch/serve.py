@@ -1,89 +1,27 @@
-"""Batched serving driver: prefill a prompt batch, then greedy decode.
+"""Deprecated alias for :mod:`repro.launch.generate`.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
-        --reduced --batch 4 --prompt-len 32 --new-tokens 16
-
-Request counters (``serve.requests``, ``serve.tokens_generated``) and
-latency spans (``serve.prefill``, ``serve.decode_step``) land in the
-process-wide :mod:`repro.obs.telemetry` singleton; set ``REPRO_OBS_DIR``
-to also persist a ``kind="serve"`` run manifest to ``runs.jsonl``.
+The batched LLM decode demo that used to live here is text generation,
+not the FL aggregation front door — the front door is the new
+:mod:`repro.serve` subsystem.  ``python -m repro.launch.serve`` keeps
+working (it forwards to :func:`repro.launch.generate.main`, emitting the
+same ``kind="serve"`` run manifest and ``serve.*`` telemetry), but new
+call sites should use ``python -m repro.launch.generate``.
 """
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from .. import configs
-from ..models import transformer as T
-from ..obs.telemetry import emit_run_manifest, get_telemetry
+from .generate import main as _generate_main
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = configs.get(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    import dataclasses
-    if cfg.embeds_input:
-        cfg = dataclasses.replace(cfg, embeds_input=False)  # serve over tokens
-
-    tel = get_telemetry()
-    tel.inc("serve.requests", args.batch)
-    emit_run_manifest("serve", cfg,
-                      extra={"arch": args.arch, "batch": args.batch,
-                             "prompt_len": args.prompt_len,
-                             "new_tokens": args.new_tokens})
-
-    key = jax.random.PRNGKey(args.seed)
-    params = T.init_params(key, cfg)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
-    capacity = args.prompt_len + args.new_tokens
-
-    t0 = time.time()
-    with tel.span("serve.prefill"):
-        logits, caches = T.prefill(params, cfg, tokens=prompts,
-                                   capacity=capacity)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        jax.block_until_ready(tok)
-    t_prefill = time.time() - t0
-
-    step = jax.jit(lambda tk, cs: T.decode_step(params, cfg, tk, cs))
-    outs = [tok]
-    t0 = time.time()
-    for _ in range(args.new_tokens - 1):
-        with tel.span("serve.decode_step"):
-            logits, caches = step(tok, caches)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        outs.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    tel.inc("serve.tokens_generated", args.batch * args.new_tokens)
-
-    gen = jnp.concatenate(outs, axis=1)
-    print(f"[serve] {cfg.name}: batch={args.batch} "
-          f"prefill({args.prompt_len} tok) {t_prefill*1e3:.1f} ms, "
-          f"decode {args.new_tokens - 1} steps "
-          f"{t_decode / max(args.new_tokens - 1, 1) * 1e3:.1f} ms/tok")
-    for b in range(min(args.batch, 2)):
-        print(f"[serve] sample {b}: {gen[b, :12].tolist()} ...")
-    for name in ("serve.prefill", "serve.decode_step"):
-        s = tel.span_stats(name)
-        if s:
-            print(f"[serve] span {name}: n={s['count']} "
-                  f"total={s['total_s']*1e3:.1f} ms "
-                  f"max={s['max_s']*1e3:.1f} ms")
+def main(argv=None):
+    warnings.warn(
+        "repro.launch.serve is deprecated; the decode demo moved to "
+        "repro.launch.generate and the FL front door lives in repro.serve",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _generate_main(argv)
 
 
 if __name__ == "__main__":

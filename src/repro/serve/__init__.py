@@ -1,0 +1,30 @@
+"""Async aggregation front door (docs/serving.md).
+
+A long-running micro-batching FL server next to the dense/legacy/sparse
+simulation paths: concurrent clients submit ``(client_id, delta,
+local_version)`` at arbitrary times; a background batcher coalesces them
+into pow2 buckets and drives the scan engine's own jitted
+participant-subset aggregation; every admitted micro-batch lands in a
+decision log that replays bit-for-bit through
+:func:`repro.fl.sparse.build_sparse_train_program`.
+
+* :mod:`repro.serve.server` — ingest: bounded queue, backpressure,
+  per-client dedup, the ``p_{k,t}`` policy refresh.
+* :mod:`repro.serve.batcher` — pow2 micro-batching + the jitted apply.
+* :mod:`repro.serve.replay` — decision log + offline replay parity.
+* :mod:`repro.serve.loadgen` — emulated client population + measurements.
+"""
+from .batcher import MicroBatcher, build_apply_fn, pick_bucket
+from .loadgen import LoadGenConfig, make_client_step, run_loadgen, toy_world
+from .replay import (BatchRecord, DecisionLog, ReplayResult,
+                     gather_logged_rounds, replay_ledgers, replay_session,
+                     verify_replay)
+from .server import AggregationServer, ServeConfig, Ticket
+
+__all__ = [
+    "AggregationServer", "ServeConfig", "Ticket", "MicroBatcher",
+    "build_apply_fn", "pick_bucket", "BatchRecord", "DecisionLog",
+    "ReplayResult", "gather_logged_rounds", "replay_ledgers",
+    "replay_session", "verify_replay", "LoadGenConfig", "make_client_step",
+    "run_loadgen", "toy_world",
+]

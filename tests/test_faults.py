@@ -414,3 +414,61 @@ def test_property_guarded_round_stays_finite(seed, p_corrupt):
                             GuardConfig(quarantine=True, clip_norm=5.0),
                             use_pallas=False)
     assert all_finite(out)
+
+
+# --- trace-fitting: FaultParams.from_trace round-trip ------------------------
+
+
+def test_from_trace_recovers_markov_and_loss_rates():
+    """Simulate the actual processes at known rates, fit back from the
+    observed traces: the MLE must land within sampling error, and the
+    config-level convenience must round-trip into a usable FaultConfig."""
+    from repro.fl.faults import FaultParams, fault_key
+    cfg = FaultConfig(p_fail=0.15, p_recover=0.4, p_loss=0.2, max_retries=2)
+    fp = cfg.params()
+    K, T = 256, 400
+    key = jax.random.PRNGKey(0)
+    avail = jnp.ones((K,), bool)
+    mask = jnp.ones((K,), jnp.int32)
+    tr_a, tr_att, tr_dlv = [], [], []
+    for t in range(T):
+        tt = jnp.int32(t)
+        avail, _ = markov_availability(tt, fault_key(key, tt, 0), avail,
+                                       fp, cfg)
+        landed, attempts, _, _ = uplink_process(t, fault_key(key, tt, 2),
+                                                mask, fp, cfg)
+        tr_a.append(np.asarray(avail))
+        tr_att.append(np.asarray(attempts))
+        tr_dlv.append(np.asarray(landed))
+    fit = FaultParams.from_trace(np.stack(tr_a), attempts=np.stack(tr_att),
+                                 delivered=np.stack(tr_dlv))
+    assert abs(float(fit.p_fail) - cfg.p_fail) < 0.02
+    assert abs(float(fit.p_recover) - cfg.p_recover) < 0.03
+    assert abs(float(fit.p_loss) - cfg.p_loss) < 0.02
+    fc = FaultConfig.from_trace(np.stack(tr_a), attempts=np.stack(tr_att),
+                                delivered=np.stack(tr_dlv), max_retries=2,
+                                p_corrupt=0.01)
+    assert isinstance(fc, FaultConfig)
+    assert fc.max_retries == 2 and fc.p_corrupt == 0.01
+    assert abs(fc.p_fail - cfg.p_fail) < 0.02
+
+
+def test_from_trace_degenerate_and_validation():
+    """All-up traces keep the clean-world defaults; malformed inputs raise
+    instead of silently fitting garbage."""
+    from repro.fl.faults import FaultParams
+    fit = FaultParams.from_trace(np.ones((10, 4), bool))
+    assert float(fit.p_fail) == 0.0 and float(fit.p_recover) == 1.0
+    assert float(fit.p_loss) == 0.0
+    # all-down: p_recover estimable, p_fail defaults
+    fit2 = FaultParams.from_trace(np.zeros((10, 4), bool))
+    assert float(fit2.p_fail) == 0.0 and float(fit2.p_recover) == 0.0
+    with pytest.raises(ValueError, match=r"\[T, K\]"):
+        FaultParams.from_trace(np.ones((10,), bool))
+    with pytest.raises(ValueError, match="together"):
+        FaultParams.from_trace(np.ones((4, 2), bool),
+                               attempts=np.ones((4, 2)))
+    with pytest.raises(ValueError, match="shapes differ"):
+        FaultParams.from_trace(np.ones((4, 2), bool),
+                               attempts=np.ones((4, 2)),
+                               delivered=np.ones((4, 3), bool))

@@ -19,7 +19,8 @@ from repro.data.device import (data_stream_key, estimate_store_bytes,
                                gather_participant_rounds,
                                round_indices_client_stream,
                                sample_round_client_stream, store_bytes)
-from repro.fl import SimConfig, make_runner, run_simulation_legacy
+from repro.fl import (FaultConfig, SimConfig, make_runner,
+                      run_simulation_legacy)
 from repro.fl import sparse as sparse_mod
 from repro.fl.sparse import (build_sparse_train_program, resolve_participation)
 from repro.models.small import init_mlp, mlp_accuracy, mlp_loss
@@ -346,3 +347,80 @@ def test_degenerate_partition_rejected_before_bincount():
         _default_cap(assign, num_clients=10 ** 8)
     with pytest.raises(ValueError, match="no examples"):
         _default_cap(assign, num_clients=2)            # all mass on client 0
+
+
+# --- phase A full round hoist: [T, K] decision matrix vs the serial scan ----
+
+
+def _phase_a_outputs(cfg, pol, cell, h, K, bucket, base_key, hoist):
+    prog = sparse_mod.build_participation_program(pol, cfg, cell, K, bucket,
+                                                  hoist_rounds=hoist)
+    return jax.jit(prog)(h, base_key)
+
+
+@pytest.mark.parametrize("with_taps", [False, True])
+def test_hoisted_phase_a_matches_serial_scan(with_taps):
+    """State-free policies with no sequential state (faults/max_staleness)
+    hoist the whole horizon into one vmap: masks, index sets, anchor slots,
+    staleness and last_tx must be bit-identical to the scanned recurrence,
+    the energy ledger equal to summation-order tolerance."""
+    from repro.core.selection import ProblemSpec, online_policy
+    K, T, bucket = 48, 30, 32
+    cell = CellConfig(num_clients=K)
+    pos = sample_positions(jax.random.PRNGKey(0), cell)
+    h = channel_gains(jax.random.PRNGKey(1), pos, T)
+    pol = online_policy(ProblemSpec(cell=cell, rho=0.05, num_rounds=T))
+    kw = {}
+    if with_taps:
+        from repro.obs.taps import MetricsSpec
+        kw["metrics"] = MetricsSpec(participation=True, staleness_hist=True,
+                                    energy_by_cause=True)
+    cfg = SimConfig(rounds=T, local_iters=1, batch_size=4, lr=0.01, **kw)
+    base_key = jax.random.PRNGKey(7)
+    rs = _phase_a_outputs(cfg, pol, cell, h, K, bucket, base_key, False)
+    rh = _phase_a_outputs(cfg, pol, cell, h, K, bucket, base_key, True)
+    np.testing.assert_array_equal(np.asarray(rs[0]), np.asarray(rh[0]))
+    np.testing.assert_allclose(np.asarray(rs[1]), np.asarray(rh[1]),
+                               rtol=1e-6, atol=1e-8)
+    for name, a, b in zip(rs[2]._fields, rs[2], rh[2]):
+        if a is None:
+            assert b is None, name
+            continue
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype.kind == "f":
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-8,
+                                       err_msg=name)
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+    if with_taps:
+        ms, mh = rs[3], rh[3]
+        np.testing.assert_array_equal(np.asarray(ms.tx_count),
+                                      np.asarray(mh.tx_count))
+        np.testing.assert_array_equal(np.asarray(ms.stale_hist),
+                                      np.asarray(mh.stale_hist))
+        np.testing.assert_allclose(np.asarray(ms.energy_cause),
+                                   np.asarray(mh.energy_cause), rtol=1e-6)
+
+
+def test_hoist_refuses_sequential_state():
+    """Forcing hoist_rounds=True under faults or max_staleness must raise —
+    both thread per-round state that a horizon vmap cannot carry."""
+    K, T, bucket = 8, 5, 8
+    cell = CellConfig(num_clients=K)
+    pol = random_policy(0.5, K)
+    cfg_f = SimConfig(rounds=T, local_iters=1, batch_size=4, lr=0.01,
+                      faults=FaultConfig(p_loss=0.1))
+    with pytest.raises(ValueError, match="hoist_rounds"):
+        sparse_mod.build_participation_program(pol, cfg_f, cell, K, bucket,
+                                               hoist_rounds=True)
+    cfg_s = SimConfig(rounds=T, local_iters=1, batch_size=4, lr=0.01,
+                      max_staleness=3)
+    with pytest.raises(ValueError, match="hoist_rounds"):
+        sparse_mod.build_participation_program(pol, cfg_s, cell, K, bucket,
+                                               hoist_rounds=True)
+    # auto-select under faults silently stays on the scan and still runs
+    pos = sample_positions(jax.random.PRNGKey(0), cell)
+    h = channel_gains(jax.random.PRNGKey(1), pos, T)
+    prog = sparse_mod.build_participation_program(pol, cfg_f, cell, K, bucket)
+    out = jax.jit(prog)(h, jax.random.PRNGKey(2))
+    assert np.asarray(out[0]).shape == (K,)
